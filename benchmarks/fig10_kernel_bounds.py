@@ -1,0 +1,79 @@
+"""Fig. 10 analogue: model-augmented kernel runtimes.
+
+Per-kernel memory-bound peak (the paper's 17-line model) for every node of
+the d_sw program, with measured CPU wall-clock of the isolated kernel and
+the Smagorinsky before/after-strength-reduction case study (§VI-C.1:
+511 µs → 129 µs on P100; we report our measured ratio)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (program_report, format_report, node_bytes,
+                        node_bound_seconds, strength_reduce_pow)
+from repro.core.stencil import DomainSpec, compile_jnp
+from repro.fv3 import stencils as S
+from repro.fv3.dyncore import FV3Config, build_dsw_program, default_params
+
+
+def _measure_node(program, node, params, fields):
+    dom = program.node_dom(node)
+    run = compile_jnp(node.stencil, dom)
+    ins = {f: fields[f] for f in node.stencil.fields}
+    ps = {p: params[p] for p in node.stencil.params}
+    jax.block_until_ready(run(ins, ps))
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(ins, ps))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run() -> list[str]:
+    cfg = FV3Config(npx=48, nk=8, halo=6)
+    dom = cfg.seq_dom()
+    p = build_dsw_program(cfg, dom)
+    params = default_params(cfg)
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                             jnp.float32) for f in p.fields}
+    lines = []
+    reports = program_report(
+        p, measure=lambda n: _measure_node(p, n, params, fields))
+    for r in reports[:12]:
+        util = f"{(r.utilization or 0) * 100:.1f}%"
+        lines.append(f"fig10/{r.label},{r.measured_s * 1e6:.1f},"
+                     f"bound_us={r.bound_s * 1e6:.2f};bytes={r.bytes_moved};"
+                     f"cpu_util_vs_tpu_bound={util}")
+
+    # Smagorinsky strength-reduction case study
+    smag = S.smagorinsky_diffusion
+    sm_dom = DomainSpec(ni=96, nj=96, nk=16, halo=6)
+    fs = {f: jnp.asarray(rng.uniform(0.5, 1.5, sm_dom.padded_shape()),
+                         jnp.float32) for f in ("delpc", "vort", "damp")}
+
+    def t_of(st):
+        run = compile_jnp(st, sm_dom)
+        jax.block_until_ready(run(fs, {"dt": 0.02}))
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(fs, {"dt": 0.02}))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    t_pow = t_of(smag)
+    t_red = t_of(strength_reduce_pow(smag))
+    lines.append(f"fig10/smagorinsky_pow,{t_pow * 1e6:.1f},"
+                 f"after_strength_reduction_us={t_red * 1e6:.1f};"
+                 f"speedup={t_pow / t_red:.2f}x;paper_speedup=3.96x")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,78 @@
+"""Fig. 11 analogue: weak scaling of the distributed dycore.
+
+The paper's claim: per-node communication stays ~constant as the global
+domain grows with fixed per-rank subdomains → near-perfect weak scaling.
+Proof here: compile the shard_map step at 6/24/96/384 ranks (fixed local
+domain) and report per-device collective bytes parsed from the partitioned
+HLO — they must stay flat.
+
+Runs in a subprocess with 512 fake devices (keeps this process at 1).
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.fv3.dyncore import FV3Config, all_state_fields, make_step_distributed
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_fv3_mesh
+
+out = []
+for layout in [(1, 1), (2, 2), (4, 4), (8, 8)]:
+    cfg = FV3Config(npx=24 * layout[0], nk=8, halo=6, layout=layout,
+                    n_split=1, k_split=1, n_tracers=2)
+    mesh = make_fv3_mesh(layout=layout)
+    step = make_step_distributed(cfg, mesh)
+    py, px = layout
+    nlp = cfg.n_local + 2 * cfg.halo
+    spec = P("tile", "y", "x")
+    state = {k: jax.ShapeDtypeStruct((6, py, px, cfg.nk, nlp, nlp),
+                                     jnp.float32,
+                                     sharding=NamedSharding(mesh, spec))
+             for k in all_state_fields(cfg)}
+    compiled = step.lower(state).compile()
+    coll = collective_bytes(compiled.as_text())
+    # shard_map HLO op shapes are per-device blocks, so the parsed sum IS
+    # the per-device communication volume
+    out.append({"ranks": mesh.size,
+                "coll_bytes_per_device": coll["total_bytes"],
+                "counts": coll["counts"]})
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run() -> list[str]:
+    import os
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    r = subprocess.run([sys.executable, "-c", CHILD], capture_output=True,
+                       text=True, timeout=1800, env=env)
+    lines = []
+    for ln in r.stdout.splitlines():
+        if ln.startswith("RESULT "):
+            data = json.loads(ln[len("RESULT "):])
+            base = data[0]["coll_bytes_per_device"]
+            for d in data:
+                rel = d["coll_bytes_per_device"] / base if base else 0
+                lines.append(
+                    f"fig11/ranks_{d['ranks']},"
+                    f"{d['coll_bytes_per_device']:.0f},"
+                    f"per_device_bytes_vs_6ranks={rel:.2f}x")
+            return lines
+    lines.append(f"fig11/error,0,stderr={r.stderr[-200:]!r}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

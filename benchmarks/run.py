@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus derived key=value
+annotations).  ``python -m benchmarks.run [--only tableX]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+MODULES = [
+    ("table1_loc", "benchmarks.table1_loc"),
+    ("table2_modules", "benchmarks.table2_modules"),
+    ("table3_opt_ladder", "benchmarks.table3_opt_ladder"),
+    ("fig10_kernel_bounds", "benchmarks.fig10_kernel_bounds"),
+    ("fig11_weak_scaling", "benchmarks.fig11_weak_scaling"),
+    ("transfer_stats", "benchmarks.transfer_stats"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, modpath in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modpath)
+            for line in mod.run():
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc()[-300:]!r}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Table II analogue: Riemann solver & FVT across domain sizes.
+
+The paper compares FORTRAN (CPU) vs GT4Py+DaCe (GPU) across
+128²–384²×80 domains and reads off two scaling trends.  On this CPU-only
+container the TPU-target columns come from the memory-bound model
+(bytes/819 GB/s — the same model the paper uses for bounds) and the
+measured column is CPU wall-clock of the jnp backend, which validates the
+*scaling trend* claims (sub-linear scaling on small domains = exposed-
+parallelism limit; near-linear at scale).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StencilProgram, program_bound_seconds, program_bytes
+from repro.core.stencil import DomainSpec
+from repro.fv3 import stencils as S
+from repro.fv3.dyncore import add_fvtp2d
+
+SIZES = [(48, 8), (96, 8), (128, 8)]  # (horizontal, levels) CPU-scaled
+
+
+def riemann_program(dom):
+    p = StencilProgram("riemann", dom)
+    for f in ["delp", "ptc", "w"]:
+        p.declare(f)
+    for f in ["pe", "aa", "bb", "cc", "rhs", "pp"]:
+        p.declare(f, transient=True)
+    p.add(S.precompute_pe, {"delp": "delp", "pe": "pe"})
+    p.add(S.riem_coeffs, {"delp": "delp", "ptc": "ptc", "aa": "aa",
+                          "bb": "bb", "cc": "cc", "rhs": "rhs", "w": "w"})
+    p.add(S.tridiag_solve, {"aa": "aa", "bb": "bb", "cc": "cc",
+                            "rhs": "rhs", "pp": "pp"})
+    p.add(S.w_update, {"w": "w", "pp": "pp", "delp": "delp", "dt": "dt"})
+    p.propagate_extents()
+    return p
+
+
+def fvt_program(dom):
+    p = StencilProgram("fvt", dom)
+    for f in ["q", "u", "v", "qout"]:
+        p.declare(f)
+    for f in ["cx", "cy"]:
+        p.declare(f, transient=True)
+    p.add(S.courant_x, {"u": "u", "cx": "cx"})
+    p.add(S.courant_y, {"v": "v", "cy": "cy"})
+    add_fvtp2d(p, "q", "qout", "t2")
+    p.propagate_extents()
+    return p
+
+
+def bench_program(p, dom, params):
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                             jnp.float32)
+              for f in p.fields}
+    run = jax.jit(lambda f: p.compile("jnp")(f, params))
+    out = run(fields)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(fields))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run() -> list[str]:
+    lines = []
+    params = {"dt": 0.02, "ptop": 10.0, "beta": 4.0, "dtdx": 0.02,
+              "dtdy": 0.02}
+    base = {}
+    for name, builder in [("riemann", riemann_program), ("fvt", fvt_program)]:
+        for n, nk in SIZES:
+            dom = DomainSpec(ni=n, nj=n, nk=nk, halo=6)
+            p = builder(dom)
+            bound = program_bound_seconds(p) * 1e6
+            wall = bench_program(p, dom, params) * 1e6
+            rel = (n * n) / (SIZES[0][0] ** 2)
+            key = (name,)
+            if key not in base:
+                base[key] = (wall, bound)
+            lines.append(
+                f"table2/{name}_{n}x{n}x{nk},{wall:.1f},"
+                f"model_bound_us={bound:.1f};domain_rel={rel:.2f};"
+                f"wall_scaling={wall / base[key][0]:.2f};"
+                f"bound_scaling={bound / base[key][1]:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

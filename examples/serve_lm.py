@@ -1,0 +1,73 @@
+"""Serving driver: batched prefill → decode loop with KV/SSM-state caches.
+
+Works for every ``--arch`` (attention, hybrid, recurrent — the cache type
+follows the block pattern).  Smoke-sized on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma2_2b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.parallel.sharding import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_params(T.model_pdefs(cfg), jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+    npre = cfg.n_prefix_embeds
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (B, S - npre if npre else S), 0,
+                                 cfg.vocab)
+    prefix = (jax.random.normal(rng, (B, npre, cfg.d_model), jnp.float32)
+              if npre else None)
+
+    t0 = time.perf_counter()
+    logits, caches = T.prefill(params, prompts, cfg, prefix_embeds=prefix,
+                               dtype=jnp.float32)
+    print(f"prefill: B={B} S={S} in {time.perf_counter() - t0:.2f}s")
+
+    # grow KV caches to S + new_tokens slots (decode writes past the prompt)
+    def grow(path, leaf):
+        names = [getattr(k, "key", "") for k in path]
+        if ("k" in names or "v" in names) and leaf.ndim == 5:
+            pad = jnp.zeros(leaf.shape[:2] + (args.new_tokens,)
+                            + leaf.shape[3:], leaf.dtype)
+            return jnp.concatenate([leaf, pad], axis=2)
+        return leaf
+
+    caches = jax.tree_util.tree_map_with_path(grow, caches)
+    decode = jax.jit(lambda p, t, c, pos: T.decode_step(
+        p, t, c, pos, cfg, dtype=jnp.float32))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out_tokens = [np.asarray(tok)[:, 0]]
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens - 1):
+        logits, caches = decode(params, tok, caches, jnp.int32(S + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok)[:, 0])
+    dt = time.perf_counter() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"decoded {args.new_tokens - 1} tokens × {B} seqs in {dt:.2f}s "
+          f"({dt / max(args.new_tokens - 1, 1) * 1e3:.0f} ms/token)")
+    print("generations:")
+    for b in range(B):
+        print(f"  seq{b}: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

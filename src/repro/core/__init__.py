@@ -1,0 +1,36 @@
+# The paper's primary contribution: a declarative stencil DSL with
+# data-centric optimization, transfer tuning and model-driven performance
+# engineering, adapted from GPU/DaCe to TPU/JAX+Pallas.
+from .graph import FieldDecl, Node, State, StencilProgram, rename_stencil  # noqa: F401
+from .orchestration import Monitor, bind_constants, orchestrate  # noqa: F401
+from .perfmodel import (  # noqa: F401
+    Hardware,
+    KernelReport,
+    P100,
+    TPU_V5E,
+    format_report,
+    node_bound_seconds,
+    node_bytes,
+    node_flops,
+    program_bound_seconds,
+    program_bytes,
+    program_report,
+)
+from .transfer_tuning import (  # noqa: F401
+    Pattern,
+    Phase1Result,
+    TransferResult,
+    transfer,
+    transfer_tune,
+    tune_cutouts,
+)
+from .transforms import (  # noqa: F401
+    can_otf_fuse,
+    can_subgraph_fuse,
+    otf_fuse,
+    prune_transients,
+    strength_reduce_pow,
+    strength_reduce_program,
+    subgraph_fuse,
+)
+from .autotune import TuneResult, model_cost, tune_stencil, wallclock  # noqa: F401

@@ -1,0 +1,242 @@
+"""Stencil program graph — the SDFG-lite data-centric IR (paper §III-B).
+
+A :class:`StencilProgram` is a state machine: a list of :class:`State`s
+executed in order, each holding stencil nodes whose data movement is explicit
+(every node declares the program fields it reads/writes and at which halo
+extents).  Transient fields (paper's removable containers) are marked so
+transformations can prune or localize them.
+
+Nodes store stencils already *renamed into program-field namespace*, which
+makes graph transformations (fusion, inlining) direct IR rewrites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .stencil.ir import Assign, Computation, Expr, FieldAccess, ParamRef, Stencil
+from .stencil.lowering_jnp import DomainSpec, compile_jnp
+from .stencil.lowering_pallas import compile_pallas
+from .stencil.schedule import Schedule
+
+
+def rename_stencil(st: Stencil, field_map: Mapping[str, str],
+                   param_map: Mapping[str, str] | None = None,
+                   temp_prefix: str = "") -> Stencil:
+    """Rename fields/params/temporaries of a stencil (pure)."""
+    param_map = dict(param_map or {})
+    tmap = {t: f"{temp_prefix}{t}" for t in st.temporaries()} if temp_prefix else {}
+
+    def mapname(n: str) -> str:
+        if n in field_map:
+            return field_map[n]
+        if n in tmap:
+            return tmap[n]
+        return n
+
+    def map_expr(e: Expr) -> Expr:
+        if isinstance(e, FieldAccess):
+            return FieldAccess(mapname(e.name), e.offset)
+        if isinstance(e, ParamRef):
+            return ParamRef(param_map.get(e.name, e.name))
+        return e.map_children(map_expr)
+
+    comps = tuple(
+        Computation(c.direction, tuple(
+            Assign(mapname(s.target), map_expr(s.value), s.interval, s.region)
+            for s in c.statements))
+        for c in st.computations)
+    return Stencil(
+        name=st.name,
+        computations=comps,
+        fields=tuple(mapname(f) for f in st.fields),
+        outputs=tuple(mapname(o) for o in st.outputs),
+        params=tuple(param_map.get(p, p) for p in st.params),
+    )
+
+
+@dataclasses.dataclass
+class FieldDecl:
+    name: str
+    dtype: Any = jnp.float32
+    transient: bool = False  # removable container (paper Fig. 4)
+
+
+@dataclasses.dataclass
+class Node:
+    """A stencil invocation; ``stencil`` uses program field names."""
+
+    label: str          # unique instance label, e.g. "fvt.flux_x#3"
+    stencil: Stencil    # renamed into program namespace
+    extend: tuple[int, int] = (0, 0)
+    schedule: Schedule | None = None
+    # params bound to program-level parameter names happen via rename
+
+    @property
+    def base_name(self) -> str:
+        """Motif label used by transfer tuning (paper §VI-B: 'stencils in FV3
+        are named; a configuration is sufficiently described by labels')."""
+        return self.stencil.name
+
+    def reads(self) -> list[str]:
+        return self.stencil.read_fields()
+
+    def writes(self) -> list[str]:
+        return [w for w in self.stencil.written() if w in self.stencil.fields]
+
+
+@dataclasses.dataclass
+class State:
+    name: str
+    nodes: list[Node] = dataclasses.field(default_factory=list)
+
+
+class StencilProgram:
+    def __init__(self, name: str, dom: DomainSpec):
+        self.name = name
+        self.dom = dom
+        self.states: list[State] = [State("s0")]
+        self.fields: dict[str, FieldDecl] = {}
+        self.params: list[str] = []
+        self._counter = 0
+
+    # -- construction --------------------------------------------------------
+    def declare(self, name: str, dtype=jnp.float32, transient: bool = False) -> str:
+        self.fields[name] = FieldDecl(name, dtype, transient)
+        return name
+
+    def new_state(self, name: str | None = None) -> State:
+        s = State(name or f"s{len(self.states)}")
+        self.states.append(s)
+        return s
+
+    def add(self, stencil: Stencil, bindings: Mapping[str, str],
+            params: Mapping[str, str] | None = None,
+            extend: tuple[int, int] = (0, 0),
+            state: State | None = None,
+            schedule: Schedule | None = None) -> Node:
+        self._counter += 1
+        renamed = rename_stencil(stencil, bindings, params,
+                                 temp_prefix=f"__t{self._counter}_")
+        for f in renamed.fields:
+            if f not in self.fields:
+                raise KeyError(f"field {f!r} not declared in program {self.name}")
+        for p in renamed.params:
+            if p not in self.params:
+                self.params.append(p)
+        node = Node(label=f"{stencil.name}#{self._counter}", stencil=renamed,
+                    extend=extend, schedule=schedule)
+        (state or self.states[-1]).nodes.append(node)
+        return node
+
+    # -- queries ---------------------------------------------------------------
+    def all_nodes(self) -> list[Node]:
+        return [n for s in self.states for n in s.nodes]
+
+    def node_dom(self, node: Node) -> DomainSpec:
+        return dataclasses.replace(self.dom, extend=node.extend)
+
+    def consumers(self, state: State, field: str, after: int) -> list[Node]:
+        return [n for n in state.nodes[after + 1:] if field in n.reads()]
+
+    def field_dead_after(self, state_idx: int, node_idx: int, field: str) -> bool:
+        """True if a transient field is never read after this point."""
+        if not self.fields[field].transient:
+            return False
+        st = self.states[state_idx]
+        for n in st.nodes[node_idx + 1:]:
+            if field in n.reads():
+                return False
+        for s in self.states[state_idx + 1:]:
+            for n in s.nodes:
+                if field in n.reads():
+                    return False
+        return True
+
+    # -- extent inference (GT4Py's transparent halo/extent analysis) ----------
+    def propagate_extents(self) -> None:
+        """Walk nodes in reverse program order; each node's compute domain is
+        extended so every downstream read (at any offset) sees computed data.
+        This is the paper's 'buffer sizes ... transparently defined by
+        inferring halo regions and extents from usage' (§III-A)."""
+        required: dict[str, tuple[int, int]] = {}
+        nodes = [(s, n) for s in self.states for n in s.nodes]
+        for state, node in reversed(nodes):
+            ei, ej = 0, 0
+            for w in node.writes():
+                r = required.get(w, (0, 0))
+                ei, ej = max(ei, r[0]), max(ej, r[1])
+            node.extend = (ei, ej)
+            ext = node.stencil.extents()
+            for w in node.writes():
+                # requirement satisfied by this writer
+                required.pop(w, None)
+            for f, e in ext.items():
+                if f not in self.fields:
+                    continue  # stencil temporary
+                di = max(abs(e[0]), abs(e[1]))
+                dj = max(abs(e[2]), abs(e[3]))
+                cur = required.get(f, (0, 0))
+                required[f] = (max(cur[0], ei + di), max(cur[1], ej + dj))
+            h = self.dom.halo
+            if ei + node.stencil.max_halo() > h or ej + node.stencil.max_halo() > h:
+                raise ValueError(
+                    f"node {node.label}: extent {(ei, ej)} + stencil halo "
+                    f"{node.stencil.max_halo()} exceeds allocation halo {h}; "
+                    "a halo exchange is required before this node")
+
+    # -- execution ---------------------------------------------------------------
+    def compile(self, backend: str = "jnp", *, interpret: bool = True,
+                donate: bool = False) -> Callable:
+        """Compile the whole program into one functional callable
+        ``fn(fields: dict, params: dict) -> dict`` (all fields threaded)."""
+        runners = []
+        for s in self.states:
+            for n in s.nodes:
+                dom = self.node_dom(n)
+                if backend == "jnp":
+                    r = compile_jnp(n.stencil, dom)
+                elif backend == "pallas":
+                    r = compile_pallas(n.stencil, dom, schedule=n.schedule,
+                                       interpret=interpret)
+                else:
+                    raise ValueError(backend)
+                runners.append((n, r))
+
+        def run(fields: dict, params: dict | None = None) -> dict:
+            params = dict(params or {})
+            env = dict(fields)
+            shape = self.dom.padded_shape()
+            template = next((v for v in fields.values()
+                             if hasattr(v, "dtype")), None)
+            for name, decl in self.fields.items():
+                if name not in env:
+                    # auto-allocated (typically transient) containers — the
+                    # backend owns allocation, never the user (paper §IV-A).
+                    # A varying-zero from an input keeps shard_map's manual-
+                    # axes (VMA) tracking consistent inside scan carries.
+                    z = jnp.zeros(shape, decl.dtype)
+                    if template is not None:
+                        z = z + (template.ravel()[0] * 0).astype(decl.dtype)
+                    env[name] = z
+            for n, r in runners:
+                ins = {f: env[f] for f in n.stencil.fields}
+                ps = {p: params[p] for p in n.stencil.params}
+                out = r(ins, ps)
+                env.update(out)
+            return env
+
+        return run
+
+    def __repr__(self):
+        lines = [f"program {self.name}: {len(self.all_nodes())} nodes, "
+                 f"{len(self.states)} states"]
+        for s in self.states:
+            lines.append(f" state {s.name}:")
+            for n in s.nodes:
+                lines.append(f"   {n.label}: reads={n.reads()} writes={n.writes()}")
+        return "\n".join(lines)

@@ -1,0 +1,33 @@
+from .ir import (  # noqa: F401
+    Assign,
+    BACKWARD,
+    BinOp,
+    Computation,
+    Const,
+    Direction,
+    Expr,
+    FieldAccess,
+    FORWARD,
+    Interval,
+    interval,
+    Max,
+    Min,
+    PARALLEL,
+    ParamRef,
+    Pow,
+    Region,
+    region,
+    Stencil,
+    UnaryOp,
+    Where,
+)
+from .frontend import Field, Param, gtstencil  # noqa: F401
+from .lowering_jnp import DomainSpec, compile_jnp  # noqa: F401
+from .lowering_pallas import compile_pallas  # noqa: F401
+from .schedule import (  # noqa: F401
+    Schedule,
+    default_schedule,
+    feasible_schedules,
+    heuristic_schedule,
+    vmem_footprint,
+)

@@ -1,0 +1,240 @@
+"""Pure-jnp lowering of Stencil IR — the debuggable oracle backend.
+
+Array convention: fields are stored ``(K, J, I)`` — I contiguous, matching
+the paper's FORTRAN data-layout finding (§VI-A.3); on TPU this puts I on the
+lane dimension.  Horizontal allocations carry ``halo`` ghost cells per side;
+K is allocated exactly.
+
+The compiled callable is functional: it returns updated arrays for every
+written field (GT4Py mutates in place; JAX cannot).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ir import (
+    Assign,
+    BinOp,
+    Computation,
+    Const,
+    Direction,
+    Expr,
+    FieldAccess,
+    Interval,
+    Max,
+    Min,
+    ParamRef,
+    Pow,
+    Region,
+    Stencil,
+    UnaryOp,
+    Where,
+)
+
+_UNARY = {
+    "neg": lambda x: -x,
+    "sqrt": jnp.sqrt,
+    "abs": jnp.abs,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "sign": jnp.sign,
+    "floor": jnp.floor,
+}
+
+_BIN = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """Compute-domain description shared by all backends."""
+
+    ni: int
+    nj: int
+    nk: int
+    halo: int
+    extend: tuple[int, int] = (0, 0)  # extra (i, j) cells computed each side
+
+    @property
+    def write_window(self):
+        ei, ej = self.extend
+        h = self.halo
+        return (slice(None), slice(h - ej, h + self.nj + ej),
+                slice(h - ei, h + self.ni + ei))
+
+    def padded_shape(self):
+        return (self.nk, self.nj + 2 * self.halo, self.ni + 2 * self.halo)
+
+
+def _read(arr: jnp.ndarray, off, dom: DomainSpec, k_slice):
+    """Window of ``arr`` shifted by offset over the (extended) write domain.
+
+    K reads are shifted by ``dk`` against the statement's interval; stencil
+    authors restrict intervals so shifted reads stay in [0, nk] (the same
+    contract GT4Py enforces)."""
+    di, dj, dk = off
+    ei, ej = dom.extend
+    h = dom.halo
+    jsl = slice(h - ej + dj, h + dom.nj + ej + dj)
+    isl = slice(h - ei + di, h + dom.ni + ei + di)
+    lo, hi = k_slice
+    ksl = slice(lo + dk, hi + dk)
+    return arr[ksl, jsl, isl]
+
+
+def _eval(e: Expr, env, dom: DomainSpec, k_slice=None):
+    if isinstance(e, Const):
+        return e.value
+    if isinstance(e, ParamRef):
+        return env[e.name]
+    if isinstance(e, FieldAccess):
+        return _read(env[e.name], e.offset, dom, k_slice)
+    if isinstance(e, BinOp):
+        return _BIN[e.op](_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+    if isinstance(e, UnaryOp):
+        return _UNARY[e.op](_eval(e.a, env, dom, k_slice))
+    if isinstance(e, Pow):
+        return jnp.power(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+    if isinstance(e, Where):
+        return jnp.where(_eval(e.cond, env, dom, k_slice),
+                         _eval(e.a, env, dom, k_slice),
+                         _eval(e.b, env, dom, k_slice))
+    if isinstance(e, Min):
+        return jnp.minimum(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+    if isinstance(e, Max):
+        return jnp.maximum(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+    raise TypeError(f"cannot lower {e!r}")
+
+
+def _region_mask(region: Region, dom: DomainSpec, dtype=bool):
+    """(nj_w, ni_w) mask of the region within the extended write window."""
+    ei, ej = dom.extend
+    ilo, ihi, jlo, jhi = region.resolve(dom.ni, dom.nj)
+    ii = jnp.arange(-ei, dom.ni + ei)
+    jj = jnp.arange(-ej, dom.nj + ej)
+    mi = (ii >= ilo) & (ii < ihi)
+    mj = (jj >= jlo) & (jj < jhi)
+    return mj[:, None] & mi[None, :]
+
+
+def _apply_parallel(comp: Computation, env: dict, dom: DomainSpec) -> None:
+    for st in comp.statements:
+        klo, khi = st.interval.resolve(dom.nk)
+        if khi <= klo:
+            continue
+        val = _eval(st.value, env, dom, k_slice=(klo, khi))
+        tgt = env[st.target]
+        w = dom.write_window
+        window = (slice(klo, khi), w[1], w[2])
+        if st.region is not None:
+            mask = _region_mask(st.region, dom)
+            val = jnp.where(mask[None, :, :], val, tgt[window])
+        val = jnp.broadcast_to(val, tgt[window].shape).astype(tgt.dtype)
+        env[st.target] = tgt.at[window].set(val)
+
+
+def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec) -> None:
+    """fori_loop over k; reads of already-written levels observe updates —
+    exact forward/backward solver semantics."""
+    written = comp.written()
+    lo = min(st.interval.resolve(dom.nk)[0] for st in comp.statements)
+    hi = max(st.interval.resolve(dom.nk)[1] for st in comp.statements)
+    names = list(env.keys())
+    arrays = {n: env[n] for n in names if hasattr(env[n], "shape") and getattr(env[n], "ndim", 0) == 3}
+    scalars = {n: env[n] for n in names if n not in arrays}
+    forward = comp.direction is Direction.FORWARD
+    w = dom.write_window
+
+    def body(step, arrs):
+        k = lo + step if forward else hi - 1 - step
+        local = dict(arrs)
+        local.update(scalars)
+        for st in comp.statements:
+            sklo, skhi = st.interval.resolve(dom.nk)
+            tgt = local[st.target]
+
+            def read2d(name, off):
+                di, dj, dk = off
+                ei, ej = dom.extend
+                h = dom.halo
+                jsl = slice(h - ej + dj, h + dom.nj + ej + dj)
+                isl = slice(h - ei + di, h + dom.ni + ei + di)
+                sl = jax.lax.dynamic_index_in_dim(local[name], k + dk, 0, keepdims=False)
+                return sl[jsl, isl]
+
+            def ev(e: Expr):
+                if isinstance(e, Const):
+                    return e.value
+                if isinstance(e, ParamRef):
+                    return scalars[e.name]
+                if isinstance(e, FieldAccess):
+                    return read2d(e.name, e.offset)
+                if isinstance(e, BinOp):
+                    return _BIN[e.op](ev(e.a), ev(e.b))
+                if isinstance(e, UnaryOp):
+                    return _UNARY[e.op](ev(e.a))
+                if isinstance(e, Pow):
+                    return jnp.power(ev(e.a), ev(e.b))
+                if isinstance(e, Where):
+                    return jnp.where(ev(e.cond), ev(e.a), ev(e.b))
+                if isinstance(e, Min):
+                    return jnp.minimum(ev(e.a), ev(e.b))
+                if isinstance(e, Max):
+                    return jnp.maximum(ev(e.a), ev(e.b))
+                raise TypeError(e)
+
+            new2d = ev(st.value)
+            cur2d = jax.lax.dynamic_index_in_dim(tgt, k, 0, keepdims=False)
+            new2d = jnp.broadcast_to(new2d, cur2d[w[1], w[2]].shape).astype(tgt.dtype)
+            if st.region is not None:
+                mask = _region_mask(st.region, dom)
+                new2d = jnp.where(mask, new2d, cur2d[w[1], w[2]])
+            active = (k >= sklo) & (k < skhi)
+            upd = cur2d.at[w[1], w[2]].set(jnp.where(active, new2d, cur2d[w[1], w[2]]))
+            local[st.target] = jax.lax.dynamic_update_index_in_dim(tgt, upd, k, 0)
+        return {n: local[n] for n in arrs}
+
+    arrays = jax.lax.fori_loop(0, hi - lo, body, arrays)
+    env.update(arrays)
+
+
+def compile_jnp(stencil: Stencil, dom: DomainSpec, *, dtype=jnp.float32):
+    """Compile a stencil into a jitted functional callable.
+
+    Returns ``fn(fields: dict, params: dict) -> dict`` with updated written
+    fields.  Temporaries are allocated internally.
+    """
+    temps = stencil.temporaries()
+
+    def run(fields: Mapping[str, jnp.ndarray], params: Mapping[str, Any] | None = None):
+        params = dict(params or {})
+        env: dict[str, Any] = dict(params)
+        for f in stencil.fields:
+            env[f] = fields[f]
+        for t in temps:
+            env[t] = jnp.zeros(dom.padded_shape(), dtype=dtype)
+        for comp in stencil.computations:
+            if comp.direction is Direction.PARALLEL:
+                _apply_parallel(comp, env, dom)
+            else:
+                _apply_vertical(comp, env, dom)
+        return {f: env[f] for f in stencil.written() if f in stencil.fields}
+
+    return jax.jit(run)

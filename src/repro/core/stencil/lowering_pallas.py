@@ -1,0 +1,404 @@
+"""Pallas TPU lowering of Stencil IR.
+
+Schedules map onto Pallas as follows (paper §V-A ↔ TPU):
+
+ * horizontal (PARALLEL) stencils: grid over K slabs; each invocation holds a
+   ``(block_k, NJ+2h, NI+2h)`` VMEM block per field.  Horizontal offsets are
+   in-block static slices (VREG shifts); K is the parallel ("map") dimension —
+   the paper's ``[Interval, Operation, K, J, I]`` order with I on lanes.
+ * vertical (FORWARD/BACKWARD) solvers: one full-column block; an in-kernel
+   ``fori_loop`` walks K.  With ``carry_storage='vreg'`` loop-carried values
+   live in registers across iterations (paper §VI-A.2 transform 3); with
+   ``'vmem'`` each level re-reads the previously written VMEM row (the
+   untransformed schedule, for A/B comparison).
+ * horizontal regions: ``'predicated'`` masks statements on index grids inside
+   the full-domain kernel; ``'split'`` emits a separate kernel writing only
+   the region's bounding box (paper Table III: "Split regions to multiple
+   kernels").
+
+Kernels are validated in ``interpret=True`` mode on CPU against the jnp
+oracle; on real TPUs the same ``pl.pallas_call`` lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ir import (
+    Assign,
+    BinOp,
+    Computation,
+    Const,
+    Direction,
+    Expr,
+    FieldAccess,
+    Max,
+    Min,
+    ParamRef,
+    Pow,
+    Region,
+    Stencil,
+    UnaryOp,
+    Where,
+)
+from .lowering_jnp import DomainSpec
+from .schedule import Schedule, default_schedule
+
+_UNARY = {
+    "neg": lambda x: -x,
+    "sqrt": jnp.sqrt,
+    "abs": jnp.abs,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "sign": jnp.sign,
+    "floor": jnp.floor,
+}
+_BIN = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+}
+
+
+def _eval_block(e: Expr, read, params):
+    """Evaluate expression over a block; ``read(name, off)`` yields arrays."""
+    if isinstance(e, Const):
+        return e.value
+    if isinstance(e, ParamRef):
+        return params[e.name]
+    if isinstance(e, FieldAccess):
+        return read(e.name, e.offset)
+    if isinstance(e, BinOp):
+        return _BIN[e.op](_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+    if isinstance(e, UnaryOp):
+        return _UNARY[e.op](_eval_block(e.a, read, params))
+    if isinstance(e, Pow):
+        return jnp.power(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+    if isinstance(e, Where):
+        return jnp.where(_eval_block(e.cond, read, params),
+                         _eval_block(e.a, read, params),
+                         _eval_block(e.b, read, params))
+    if isinstance(e, Min):
+        return jnp.minimum(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+    if isinstance(e, Max):
+        return jnp.maximum(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+    raise TypeError(e)
+
+
+def _hwindow(dom: DomainSpec, dj: int, di: int):
+    """Static (j, i) slices of the extended write window shifted by offset."""
+    ei, ej = dom.extend
+    h = dom.halo
+    return (slice(h - ej + dj, h + dom.nj + ej + dj),
+            slice(h - ei + di, h + dom.ni + ei + di))
+
+
+def _region_mask_block(region: Region, dom: DomainSpec):
+    ei, ej = dom.extend
+    ilo, ihi, jlo, jhi = region.resolve(dom.ni, dom.nj)
+    nj_w, ni_w = dom.nj + 2 * ej, dom.ni + 2 * ei
+    jj = jax.lax.broadcasted_iota(jnp.int32, (nj_w, ni_w), 0) - ej
+    ii = jax.lax.broadcasted_iota(jnp.int32, (nj_w, ni_w), 1) - ei
+    return (jj >= jlo) & (jj < jhi) & (ii >= ilo) & (ii < ihi)
+
+
+# ---------------------------------------------------------------------------
+# Horizontal (PARALLEL) stencils — K-slab grid
+# ---------------------------------------------------------------------------
+
+
+def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
+                       statements, param_names):
+    written = [w for w in stencil.written() if w in stencil.fields]
+    fields = list(stencil.fields)
+    temps = stencil.temporaries()
+    nk = dom.nk
+    bk = sched.block_k if (sched.block_k and sched.k_as_grid) else nk
+    if any(st.value.accesses() and any(a.offset[2] != 0 for a in st.value.accesses())
+           for st in statements):
+        bk = nk  # K offsets require whole-column blocks
+
+    def kernel(*refs):
+        n_in = len(fields) + len(param_names)
+        in_refs = dict(zip(fields, refs[:len(fields)]))
+        params = {p: refs[len(fields) + i][0] for i, p in enumerate(param_names)}
+        out_refs = dict(zip(written, refs[n_in:]))
+        # read-modify-write init: copy input blocks into outputs
+        for w in written:
+            out_refs[w][...] = in_refs[w][...]
+        env: dict[str, Any] = {}
+        pid = pl.program_id(0) if bk != nk else 0
+        k0 = pid * bk
+
+        def read(name, off):
+            di, dj, dk = off
+            jsl, isl = _hwindow(dom, dj, di)
+            if name in env:  # temporary or freshly computed value
+                src = env[name]
+                return src if (di, dj, dk) == (0, 0, 0) else None
+            ref = out_refs.get(name, in_refs.get(name))
+            if dk == 0:
+                return ref[:, jsl, isl]
+            # K-offset read (bk == nk): static shifted slice, edge-padded —
+            # interval restrictions make the padded rows dead.
+            sl = ref[max(0, dk):nk + min(0, dk) if dk < 0 else nk, jsl, isl]
+            # pad to block K extent with edge rows (interval masks make the
+            # padded rows dead)
+            if dk > 0:
+                pad = jnp.broadcast_to(sl[-1:], (dk,) + sl.shape[1:])
+                return jnp.concatenate([sl, pad], axis=0)
+            if dk < 0:
+                pad = jnp.broadcast_to(sl[:1], (-dk,) + sl.shape[1:])
+                return jnp.concatenate([pad, sl], axis=0)
+            return sl
+
+        def read_resolved(name, off):
+            di, dj, dk = off
+            if name in env and (di, dj, dk) == (0, 0, 0):
+                return env[name]
+            if name in env:
+                raise NotImplementedError(
+                    f"offset read {off} of in-kernel temporary {name!r}; "
+                    "allocate it as a field or fuse with OTF instead")
+            return read(name, off)
+
+        ei, ej = dom.extend
+        blk_k = bk
+        kk = (jax.lax.broadcasted_iota(
+            jnp.int32, (blk_k, dom.nj + 2 * ej, dom.ni + 2 * ei), 0) + k0)
+        for st in statements:
+            val = _eval_block(st.value, read_resolved, params)
+            klo, khi = st.interval.resolve(nk)
+            jsl, isl = _hwindow(dom, 0, 0)
+            tgt_ref = out_refs.get(st.target)
+            if tgt_ref is not None:
+                cur = tgt_ref[:, jsl, isl]
+            else:
+                cur = env.get(st.target)
+                if cur is None:
+                    cur = jnp.zeros_like(kk, dtype=val.dtype if hasattr(val, "dtype")
+                                         else jnp.float32) * 0.0
+            val = jnp.broadcast_to(val, kk.shape).astype(
+                cur.dtype if hasattr(cur, "dtype") else jnp.float32)
+            mask = (kk >= klo) & (kk < khi)
+            if st.region is not None and sched.region_strategy == "predicated":
+                mask = mask & _region_mask_block(st.region, dom)[None]
+            elif st.region is not None:
+                # split strategy: narrow writes to the region bbox statically
+                rilo, rihi, rjlo, rjhi = st.region.resolve(dom.ni, dom.nj)
+                mask = mask & _region_mask_block(st.region, dom)[None]
+            new = jnp.where(mask, val, cur)
+            if tgt_ref is not None:
+                tgt_ref[:, jsl, isl] = new
+            env[st.target] = new
+        return
+
+    njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
+    grid = (nk // bk,)
+    in_specs = ([pl.BlockSpec((bk, njp, nip), lambda k: (k, 0, 0))
+                 for _ in fields] +
+                [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
+    out_specs = [pl.BlockSpec((bk, njp, nip), lambda k: (k, 0, 0))
+                 for _ in written]
+    return kernel, grid, in_specs, out_specs, written, bk
+
+
+# ---------------------------------------------------------------------------
+# Vertical solvers — full-column kernel, fori_loop over K
+# ---------------------------------------------------------------------------
+
+
+def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
+                     param_names):
+    written = [w for w in stencil.written() if w in stencil.fields]
+    fields = list(stencil.fields)
+    temps = stencil.temporaries()
+    nk = dom.nk
+
+    # which (field, k-offset) pairs are loop-carried reads of written values
+    carried: set[str] = set()
+    for comp in stencil.computations:
+        if comp.direction is Direction.PARALLEL:
+            continue
+        prev = -1 if comp.direction is Direction.FORWARD else 1
+        w = set(comp.written())
+        for st in comp.statements:
+            for a in st.value.accesses():
+                if a.name in w and a.offset[2] == prev:
+                    carried.add(a.name)
+
+    def kernel(*refs):
+        n_in = len(fields) + len(param_names)
+        in_refs = dict(zip(fields, refs[:len(fields)]))
+        params = {p: refs[len(fields) + i][0] for i, p in enumerate(param_names)}
+        out_refs = dict(zip(written, refs[n_in:len(refs) - len(temps)]))
+        temp_refs = dict(zip(temps, refs[len(refs) - len(temps):]))
+        for w in written:
+            out_refs[w][...] = in_refs[w][...]
+
+        jsl, isl = _hwindow(dom, 0, 0)
+        shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
+
+        def ref_of(name):
+            if name in out_refs:
+                return out_refs[name]
+            if name in temp_refs:
+                return temp_refs[name]
+            return in_refs[name]
+
+        for comp in stencil.computations:
+            if comp.direction is Direction.PARALLEL:
+                # elementwise pass inside a solver stencil
+                kk = jax.lax.broadcasted_iota(jnp.int32, (nk,) + shape2d, 0)
+                for st in comp.statements:
+                    def read_par(name, off):
+                        di, dj, dk = off
+                        js, is_ = _hwindow(dom, dj, di)
+                        return ref_of(name)[:, js, is_]
+                    val = _eval_block(st.value, read_par, params)
+                    klo, khi = st.interval.resolve(nk)
+                    tgt = ref_of(st.target)
+                    cur = tgt[:, jsl, isl]
+                    val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
+                    mask = (kk >= klo) & (kk < khi)
+                    if st.region is not None:
+                        mask = mask & _region_mask_block(st.region, dom)[None]
+                    tgt[:, jsl, isl] = jnp.where(mask, val, cur)
+                continue
+
+            forward = comp.direction is Direction.FORWARD
+            prev = -1 if forward else 1
+            lo = min(st.interval.resolve(nk)[0] for st in comp.statements)
+            hi = max(st.interval.resolve(nk)[1] for st in comp.statements)
+            carry_names = sorted(carried & set(comp.written()))
+
+            def init_carry():
+                return {n: jnp.zeros(shape2d,
+                                     dtype=out_refs[n].dtype if n in out_refs
+                                     else temp_refs[n].dtype)
+                        for n in carry_names}
+
+            def body(step, carry):
+                k = lo + step if forward else hi - 1 - step
+                level: dict[str, Any] = {}
+
+                def read_lvl(name, off):
+                    di, dj, dk = off
+                    js, is_ = _hwindow(dom, dj, di)
+                    if (dk == prev and name in carry_names
+                            and sched.carry_storage == "vreg"
+                            and di == 0 and dj == 0):
+                        return carry[name]
+                    return ref_of(name)[k + dk, js, is_]
+
+                new_carry = dict(carry)
+                for st in comp.statements:
+                    sklo, skhi = st.interval.resolve(nk)
+                    val = _eval_block(st.value, read_lvl, params)
+                    tgt = ref_of(st.target)
+                    cur = tgt[k, jsl, isl]
+                    val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
+                    active = (k >= sklo) & (k < skhi)
+                    if st.region is not None:
+                        rm = _region_mask_block(st.region, dom)
+                        val = jnp.where(rm, val, cur)
+                    newv = jnp.where(active, val, cur)
+                    tgt[k, jsl, isl] = newv
+                    if st.target in carry_names:
+                        new_carry[st.target] = newv
+                return new_carry
+
+            jax.lax.fori_loop(0, hi - lo, body, init_carry())
+        return
+
+    njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
+    grid = (1,)
+    full = pl.BlockSpec((nk, njp, nip), lambda _: (0, 0, 0))
+    in_specs = ([full for _ in fields] +
+                [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
+    out_specs = [full for _ in written] + [full for _ in temps]
+    return kernel, grid, in_specs, out_specs, written, temps
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+
+
+def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
+                   schedule: Schedule | None = None, dtype=jnp.float32,
+                   interpret: bool = True):
+    """Compile a stencil into a Pallas-backed functional callable.
+
+    ``interpret=True`` executes on CPU for validation; on TPU pass False.
+    """
+    sched = schedule or default_schedule(stencil, (dom.nk, dom.nj, dom.ni))
+    param_names = list(stencil.params)
+    shape = dom.padded_shape()
+
+    if stencil.is_vertical_solver():
+        kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(
+            stencil, dom, sched, param_names)
+
+        def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
+            params = dict(params or {})
+            args = ([jnp.asarray(fields[f]) for f in stencil.fields] +
+                    [jnp.asarray(params[p], dtype=dtype).reshape(1)
+                     for p in param_names])
+            out_shapes = ([jax.ShapeDtypeStruct(shape, args[0].dtype)
+                           for _ in written] +
+                          [jax.ShapeDtypeStruct(shape, dtype) for _ in temps])
+            outs = pl.pallas_call(
+                kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+                out_shape=out_shapes, interpret=interpret,
+            )(*args)
+            return dict(zip(written, outs[:len(written)]))
+
+        return jax.jit(run)
+
+    # horizontal stencil — possibly split regions into separate kernels
+    statements = [st for c in stencil.computations for st in c.statements]
+    if sched.region_strategy == "split":
+        main = [st for st in statements if st.region is None]
+        regionals = [st for st in statements if st.region is not None]
+        groups = ([main] if main else []) + [[st] for st in regionals]
+    else:
+        groups = [statements]
+
+    compiled = []
+    for grp in groups:
+        kernel, grid, in_specs, out_specs, written, bk = _horizontal_kernel(
+            stencil, dom, sched, grp, param_names)
+        compiled.append((kernel, grid, in_specs, out_specs, written))
+
+    def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
+        params = dict(params or {})
+        cur = {f: jnp.asarray(fields[f]) for f in stencil.fields}
+        for kernel, grid, in_specs, out_specs, written in compiled:
+            args = ([cur[f] for f in stencil.fields] +
+                    [jnp.asarray(params[p], dtype=dtype).reshape(1)
+                     for p in param_names])
+            out_shapes = [jax.ShapeDtypeStruct(shape, cur[w].dtype) for w in written]
+            outs = pl.pallas_call(
+                kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+                out_shape=out_shapes, interpret=interpret,
+            )(*args)
+            for w, o in zip(written, outs):
+                cur[w] = o
+        return {w: cur[w] for w in stencil.written() if w in stencil.fields}
+
+    return jax.jit(run)

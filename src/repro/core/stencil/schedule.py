@@ -1,0 +1,116 @@
+"""Stencil schedules — the tunable hardware-mapping attributes (paper §V-A).
+
+A :class:`Schedule` captures, per stencil node, exactly the knobs the paper
+enumerates for its ``StencilComputation`` library nodes:
+
+ * iteration order (which dimension is unit-stride → TPU lane dim),
+ * tiling and tile sizes in each dimension,
+ * map-vs-loop per dimension (parallel grid dim vs in-kernel loop),
+ * local-storage kind for loop carries (re-read VMEM vs VREG carry),
+ * horizontal-region strategy (predicated full-domain map vs split kernels).
+
+Validity rules (the paper generates "a list of feasible options"): vertical
+solvers cannot map K to the grid; blocks must fit VMEM; lane dim should be a
+multiple of 128 and sublane of 8 for f32 (TPU tiling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterator
+
+from .ir import Stencil
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+LANE = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    # tile sizes; 0 means "whole extent"
+    block_i: int = 0
+    block_j: int = 0
+    block_k: int = 8
+    # map-vs-loop: True → dimension is a parallel grid dim
+    k_as_grid: bool = True  # horizontal stencils only
+    # local storage for vertical-solver carries: "vreg" | "vmem"
+    carry_storage: str = "vreg"
+    # horizontal regions: "predicated" | "split"
+    region_strategy: str = "predicated"
+    # unit-stride dimension; "I" is the paper's (FORTRAN-layout) choice
+    unit_stride: str = "I"
+
+    def describe(self) -> str:
+        return (f"bi={self.block_i or 'full'},bj={self.block_j or 'full'},"
+                f"bk={self.block_k or 'full'},kgrid={self.k_as_grid},"
+                f"carry={self.carry_storage},region={self.region_strategy}")
+
+
+def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape, dtype_bytes=4) -> int:
+    """Bytes of VMEM one kernel invocation touches under this schedule."""
+    nk, nj, ni = dom_shape
+    bi = sched.block_i or ni
+    bj = sched.block_j or nj
+    bk = (sched.block_k or nk) if (sched.k_as_grid and not stencil.is_vertical_solver()) else nk
+    n_bufs = len(stencil.fields) + len(stencil.temporaries())
+    return n_bufs * bi * bj * bk * dtype_bytes
+
+
+def feasible_schedules(stencil: Stencil, dom_shape,
+                       dtype_bytes=4) -> Iterator[Schedule]:
+    """Enumerate valid schedules for a stencil on a local domain (paper §V-A:
+    'for each node we generate a list of feasible options')."""
+    nk, nj, ni = dom_shape
+    vertical = stencil.is_vertical_solver()
+    has_regions = any(s.region is not None
+                      for c in stencil.computations for s in c.statements)
+    k_opts = [1, 4, 8, 16, 0] if not vertical else [0]
+    i_opts = [0] if ni <= 2 * LANE else [0, LANE, 2 * LANE]
+    j_opts = [0, SUBLANE, 4 * SUBLANE, 16 * SUBLANE]
+    region_opts = ["predicated", "split"] if has_regions else ["predicated"]
+    carry_opts = ["vreg", "vmem"] if vertical else ["vreg"]
+    for bi, bj, bk, reg, carry in itertools.product(
+            i_opts, j_opts, k_opts, region_opts, carry_opts):
+        s = Schedule(block_i=bi, block_j=bj, block_k=bk,
+                     k_as_grid=not vertical, carry_storage=carry,
+                     region_strategy=reg)
+        if vmem_footprint(stencil, s, dom_shape, dtype_bytes) > VMEM_BYTES:
+            continue
+        # stencils with k offsets need whole-K blocks (no overlapping blocks
+        # across the K grid on TPU)
+        if not vertical and stencil.has_k_offsets() and bk != 0:
+            continue
+        yield s
+
+
+def default_schedule(stencil: Stencil, dom_shape, dtype_bytes=4) -> Schedule:
+    """The backend's default before any tuning (paper's 'Default' row in
+    Table III): whole-domain blocks, VMEM re-reads, predicated regions."""
+    vertical = stencil.is_vertical_solver()
+    return Schedule(block_i=0, block_j=0,
+                    block_k=0 if (vertical or stencil.has_k_offsets()) else 0,
+                    k_as_grid=not vertical,
+                    carry_storage="vmem", region_strategy="predicated")
+
+
+def heuristic_schedule(stencil: Stencil, dom_shape, dtype_bytes=4) -> Schedule:
+    """Initial heuristics (paper §VI-A): smallest VMEM-fitting K slab for
+    horizontal stencils (maximizes grid parallelism while keeping full IJ for
+    halo reuse); full-column blocks with VREG carries for vertical solvers."""
+    nk, nj, ni = dom_shape
+    if stencil.is_vertical_solver():
+        return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=False,
+                        carry_storage="vreg", region_strategy="predicated")
+    if stencil.has_k_offsets():
+        return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=True,
+                        carry_storage="vreg", region_strategy="predicated")
+    bk = 1
+    while (vmem_footprint(stencil, Schedule(block_k=bk), dom_shape, dtype_bytes)
+           <= VMEM_BYTES // 2 and bk < nk):
+        bk *= 2
+    bk = min(bk, nk)
+    return Schedule(block_i=0, block_j=0, block_k=bk, k_as_grid=True,
+                    carry_storage="vreg", region_strategy="predicated")

@@ -1,0 +1,209 @@
+"""Transfer tuning (paper §VI-B — the novel contribution).
+
+Phase 1: divide the program into *cutout* subgraphs (we use states, as the
+paper does for FVT's 127 states), exhaustively tune each cutout over fusion
+configurations (weakly-connected subsets with ≥2 nodes), and keep the top-M
+configurations per transformation as *patterns* — described purely by the
+stencil labels involved and the transformation applied ("since stencils in
+FV3 are named, a configuration is sufficiently described by a set of labels
+of the candidates and which transformations were applied").
+
+Phase 2: scan the target graph for label matches and apply a pattern only
+where it also improves the local performance model — with the paper's
+pruning: first match per pattern per state, most-improving pattern first.
+
+The scoring objective is pluggable (analytical model and/or wall-clock), the
+hierarchy is the paper's: OTF first, then SGF on the OTF-optimized graph.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import itertools
+from typing import Callable
+
+from .graph import Node, State, StencilProgram
+from .perfmodel import Hardware, TPU_V5E, node_bound_seconds
+from .transforms import (
+    can_otf_fuse,
+    can_subgraph_fuse,
+    otf_fuse,
+    subgraph_fuse,
+)
+
+LAUNCH_OVERHEAD = 1.5e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    kind: str               # "otf" | "sgf"
+    labels: tuple[str, ...]  # base stencil names, in dataflow order
+    benefit: float           # modeled seconds saved on the source cutout
+
+    def describe(self) -> str:
+        return f"{self.kind}({' -> '.join(self.labels)}) Δ={self.benefit * 1e6:.2f}us"
+
+
+def state_cost(program: StencilProgram, state: State,
+               hw: Hardware = TPU_V5E) -> float:
+    return sum(node_bound_seconds(program, n, hw) + LAUNCH_OVERHEAD
+               for n in state.nodes)
+
+
+def _clone_cutout(program: StencilProgram, state: State
+                  ) -> tuple[StencilProgram, State]:
+    cut = StencilProgram(f"{program.name}/cutout", program.dom)
+    cut.fields = dict(program.fields)
+    cut.params = list(program.params)
+    new_state = State(state.name, [copy.deepcopy(n) for n in state.nodes])
+    cut.states = [new_state]
+    return cut, new_state
+
+
+def _otf_candidates(state: State) -> list[tuple[Node, Node]]:
+    out = []
+    for i, prod in enumerate(state.nodes):
+        for cons in state.nodes[i + 1:]:
+            if set(prod.writes()) & set(cons.reads()) and can_otf_fuse(prod, cons):
+                out.append((prod, cons))
+    return out
+
+
+def _sgf_candidates(state: State, max_len: int = 4) -> list[list[Node]]:
+    """Weakly-connected consecutive runs with ≥2 nodes (paper: 'weakly
+    connected subgraphs of the state with at least two maps')."""
+    out = []
+    n = len(state.nodes)
+    for lo in range(n):
+        for hi in range(lo + 2, min(n, lo + max_len) + 1):
+            nodes = state.nodes[lo:hi]
+            # weak connectivity: consecutive nodes share a field
+            connected = all(
+                (set(a.reads()) | set(a.writes())) &
+                (set(b.reads()) | set(b.writes()))
+                for a, b in zip(nodes, nodes[1:]))
+            if connected and can_subgraph_fuse(nodes):
+                out.append(nodes)
+    return out
+
+
+@dataclasses.dataclass
+class Phase1Result:
+    patterns: list[Pattern]
+    n_configs: int          # total configurations evaluated (paper: 1,272)
+
+
+def tune_cutouts(program: StencilProgram, *, kind: str, top_m: int = 2,
+                 hw: Hardware = TPU_V5E,
+                 measure: Callable[[StencilProgram], float] | None = None,
+                 ) -> Phase1Result:
+    """Phase 1 over every state of ``program`` for one transformation kind."""
+    patterns: list[Pattern] = []
+    n_configs = 0
+    for state in program.states:
+        base_cost = state_cost(program, state, hw)
+        scored: list[Pattern] = []
+        if kind == "otf":
+            for prod, cons in _otf_candidates(state):
+                n_configs += 1
+                cut, cst = _clone_cutout(program, state)
+                p2 = next(n for n in cst.nodes if n.label == prod.label)
+                c2 = next(n for n in cst.nodes if n.label == cons.label)
+                otf_fuse(cut, cst, p2, c2)
+                cost = (measure(cut) if measure else state_cost(cut, cst, hw))
+                if cost < base_cost:
+                    scored.append(Pattern("otf",
+                                          (prod.base_name, cons.base_name),
+                                          base_cost - cost))
+        elif kind == "sgf":
+            for nodes in _sgf_candidates(state):
+                n_configs += 1
+                cut, cst = _clone_cutout(program, state)
+                members = [n for n in cst.nodes
+                           if n.label in {m.label for m in nodes}]
+                subgraph_fuse(cut, cst, members)
+                cost = (measure(cut) if measure else state_cost(cut, cst, hw))
+                if cost < base_cost:
+                    scored.append(Pattern("sgf",
+                                          tuple(n.base_name for n in nodes),
+                                          base_cost - cost))
+        else:
+            raise ValueError(kind)
+        scored.sort(key=lambda p: -p.benefit)
+        patterns.extend(scored[:top_m])
+    # dedupe by label signature, keep best benefit
+    best: dict[tuple, Pattern] = {}
+    for p in patterns:
+        key = (p.kind, p.labels)
+        if key not in best or p.benefit > best[key].benefit:
+            best[key] = p
+    return Phase1Result(sorted(best.values(), key=lambda p: -p.benefit), n_configs)
+
+
+@dataclasses.dataclass
+class TransferResult:
+    applied: list[tuple[str, str]]  # (state name, pattern description)
+    n_otf: int
+    n_sgf: int
+
+
+def transfer(program: StencilProgram, patterns: list[Pattern], *,
+             hw: Hardware = TPU_V5E) -> TransferResult:
+    """Phase 2: apply matching patterns across the whole program where the
+    local model improves (paper: 20 OTF + 583 SGF transferred to FV3)."""
+    applied: list[tuple[str, str]] = []
+    n_otf = n_sgf = 0
+    for state in program.states:
+        for pat in patterns:  # most-improving first (sorted by phase 1)
+            # first match per pattern per state (paper's pruning)
+            match = _find_match(state, pat)
+            if match is None:
+                continue
+            before = state_cost(program, state, hw)
+            snapshot = copy.deepcopy(state.nodes)
+            try:
+                if pat.kind == "otf":
+                    otf_fuse(program, state, match[0], match[1])
+                else:
+                    subgraph_fuse(program, state, list(match))
+            except AssertionError:
+                state.nodes = snapshot
+                continue
+            after = state_cost(program, state, hw)
+            if after < before:
+                applied.append((state.name, pat.describe()))
+                if pat.kind == "otf":
+                    n_otf += 1
+                else:
+                    n_sgf += 1
+            else:
+                state.nodes = snapshot  # revert: no local improvement
+    return TransferResult(applied, n_otf, n_sgf)
+
+
+def _find_match(state: State, pat: Pattern):
+    if pat.kind == "otf":
+        for prod, cons in _otf_candidates(state):
+            if (prod.base_name, cons.base_name) == pat.labels:
+                return (prod, cons)
+        return None
+    L = len(pat.labels)
+    for lo in range(len(state.nodes) - L + 1):
+        nodes = state.nodes[lo:lo + L]
+        if tuple(n.base_name for n in nodes) == pat.labels and \
+                can_subgraph_fuse(nodes):
+            return tuple(nodes)
+    return None
+
+
+def transfer_tune(source: StencilProgram, target: StencilProgram, *,
+                  top_m: int = 2, hw: Hardware = TPU_V5E,
+                  ) -> tuple[Phase1Result, Phase1Result, TransferResult]:
+    """The paper's full hierarchical pipeline: tune OTF on the source, apply;
+    tune SGF on the OTF-optimized source; transfer both to the target."""
+    otf_res = tune_cutouts(source, kind="otf", top_m=top_m, hw=hw)
+    transfer(source, otf_res.patterns, hw=hw)      # optimize the source itself
+    sgf_res = tune_cutouts(source, kind="sgf", top_m=1, hw=hw)
+    result = transfer(target, otf_res.patterns + sgf_res.patterns, hw=hw)
+    return otf_res, sgf_res, result

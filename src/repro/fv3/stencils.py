@@ -1,0 +1,240 @@
+"""FV3 stencil definitions in the DSL (paper §II, §IV).
+
+This is the "user code": declarative, schedule-free, close to the discretized
+math.  All performance engineering happens in the toolchain (graph
+transformations + schedules), never here — the paper's headline discipline.
+
+Modules mirror the FORTRAN subroutine structure (paper §IV-A):
+  * fv_tp_2d  — finite-volume transport (PPM, Lin–Rood 2D) — paper §VIII-C
+  * riem_solver_c — vertical semi-implicit Riemann solver — paper §VIII-B
+  * c_sw / d_sw  — acoustic-step wind/mass updates incl. the paper's
+    edge-region example (§IV-B) and Smagorinsky diffusion (§VI-C.1)
+"""
+
+from __future__ import annotations
+
+from repro.core.stencil import Field, Param, gtstencil
+
+# ---------------------------------------------------------------------------
+# fv_tp_2d: PPM finite-volume transport
+# ---------------------------------------------------------------------------
+
+
+@gtstencil
+def al_x(q: Field, al: Field):
+    """4th-order interface value in x (PPM reconstruction)."""
+    with computation(PARALLEL), interval(...):
+        al = (7.0 / 12.0) * (q[-1, 0, 0] + q[0, 0, 0]) \
+            - (1.0 / 12.0) * (q[-2, 0, 0] + q[1, 0, 0])
+
+
+@gtstencil
+def al_y(q: Field, al: Field):
+    with computation(PARALLEL), interval(...):
+        al = (7.0 / 12.0) * (q[0, -1, 0] + q[0, 0, 0]) \
+            - (1.0 / 12.0) * (q[0, -2, 0] + q[0, 1, 0])
+
+
+@gtstencil
+def fx_ppm(q: Field, al: Field, cx: Field, fx: Field):
+    """Monotone-clamped PPM flux in x; ``cx`` is the interface Courant
+    number (positive = flow from the left cell)."""
+    with computation(PARALLEL), interval(...):
+        bl = al[0, 0, 0] - q[0, 0, 0]
+        br = al[1, 0, 0] - q[0, 0, 0]
+        b0 = bl + br
+        fcand = where(
+            cx > 0.0,
+            q[-1, 0, 0] + (1.0 - cx) * (br[-1, 0, 0] - cx * b0[-1, 0, 0]),
+            q[0, 0, 0] - (1.0 + cx) * (bl[0, 0, 0] + cx * b0[0, 0, 0]))
+        lo = min(q[-1, 0, 0], q[0, 0, 0])
+        hi = max(q[-1, 0, 0], q[0, 0, 0])
+        fx = cx * min(max(fcand, lo), hi)
+
+
+@gtstencil
+def fy_ppm(q: Field, al: Field, cy: Field, fy: Field):
+    with computation(PARALLEL), interval(...):
+        bl = al[0, 0, 0] - q[0, 0, 0]
+        br = al[0, 1, 0] - q[0, 0, 0]
+        b0 = bl + br
+        fcand = where(
+            cy > 0.0,
+            q[0, -1, 0] + (1.0 - cy) * (br[0, -1, 0] - cy * b0[0, -1, 0]),
+            q[0, 0, 0] - (1.0 + cy) * (bl[0, 0, 0] + cy * b0[0, 0, 0]))
+        lo = min(q[0, -1, 0], q[0, 0, 0])
+        hi = max(q[0, -1, 0], q[0, 0, 0])
+        fy = cy * min(max(fcand, lo), hi)
+
+
+@gtstencil
+def inner_x_update(q: Field, fx: Field, qx: Field):
+    """Advective inner update (Lin–Rood operator splitting, x first)."""
+    with computation(PARALLEL), interval(...):
+        qx = q[0, 0, 0] + 0.5 * (fx[0, 0, 0] - fx[1, 0, 0])
+
+
+@gtstencil
+def inner_y_update(q: Field, fy: Field, qy: Field):
+    with computation(PARALLEL), interval(...):
+        qy = q[0, 0, 0] + 0.5 * (fy[0, 0, 0] - fy[0, 1, 0])
+
+
+@gtstencil
+def flux_divergence(q: Field, fx: Field, fy: Field, qout: Field):
+    """Conservative update from interface fluxes (unit cell metric)."""
+    with computation(PARALLEL), interval(...):
+        qout = q[0, 0, 0] + (fx[0, 0, 0] - fx[1, 0, 0]) \
+            + (fy[0, 0, 0] - fy[0, 1, 0])
+
+
+@gtstencil
+def courant_x(u: Field, cx: Field, dtdx: Param):
+    """Interface Courant numbers from cell-centered winds."""
+    with computation(PARALLEL), interval(...):
+        cx = 0.5 * (u[-1, 0, 0] + u[0, 0, 0]) * dtdx
+
+
+@gtstencil
+def courant_y(v: Field, cy: Field, dtdy: Param):
+    with computation(PARALLEL), interval(...):
+        cy = 0.5 * (v[0, -1, 0] + v[0, 0, 0]) * dtdy
+
+
+# ---------------------------------------------------------------------------
+# c_sw-lite: C-grid winds, divergence, and the paper's edge-region stencil
+# ---------------------------------------------------------------------------
+
+
+@gtstencil
+def edge_flux(flux: Field, velocity: Field, velocity_c: Field, cosa: Field,
+              sina: Field, dt2: Param):
+    """Verbatim structure of the paper's horizontal-region example (§IV-B)."""
+    with computation(PARALLEL), interval(...):
+        flux = dt2 * (velocity - velocity_c * cosa) / sina
+        with horizontal(region[:, 0]):
+            flux = dt2 * velocity
+        with horizontal(region[:, -1]):
+            flux = dt2 * velocity
+
+
+@gtstencil
+def divergence(u: Field, v: Field, div: Field, rdx: Param, rdy: Param):
+    with computation(PARALLEL), interval(...):
+        div = (0.5 * (u[1, 0, 0] - u[-1, 0, 0])) * rdx \
+            + (0.5 * (v[0, 1, 0] - v[0, -1, 0])) * rdy
+
+
+@gtstencil
+def csw_update(delp: Field, pt: Field, div: Field, delpc: Field, ptc: Field,
+               dt2: Param):
+    """Half-step C-grid mass/temperature update."""
+    with computation(PARALLEL), interval(...):
+        delpc = delp[0, 0, 0] * (1.0 - dt2 * div[0, 0, 0])
+        ptc = pt[0, 0, 0] * (1.0 - dt2 * div[0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# d_sw-lite: vorticity, kinetic energy, Smagorinsky, wind update
+# ---------------------------------------------------------------------------
+
+
+@gtstencil
+def vorticity(u: Field, v: Field, vort: Field, rdx: Param, rdy: Param):
+    with computation(PARALLEL), interval(...):
+        vort = (0.5 * (v[1, 0, 0] - v[-1, 0, 0])) * rdx \
+            - (0.5 * (u[0, 1, 0] - u[0, -1, 0])) * rdy
+
+
+@gtstencil
+def kinetic_energy(u: Field, v: Field, ke: Field):
+    with computation(PARALLEL), interval(...):
+        ke = 0.5 * (u[0, 0, 0] * u[0, 0, 0] + v[0, 0, 0] * v[0, 0, 0])
+
+
+@gtstencil
+def smagorinsky_diffusion(delpc: Field, vort: Field, damp: Field, dt: Param):
+    """The paper's §VI-C.1 case-study kernel — written with ``**`` exactly as
+    in the paper; the toolchain's strength-reduction pass optimizes it."""
+    with computation(PARALLEL), interval(...):
+        damp = dt * (delpc[0, 0, 0] ** 2.0 + vort[0, 0, 0] ** 2.0) ** 0.5
+
+
+@gtstencil
+def wind_update(u: Field, v: Field, ke: Field, vort: Field, damp: Field,
+                pe: Field, dt: Param, rdx: Param, rdy: Param):
+    """Rotational + gradient + Smagorinsky-damped wind update."""
+    with computation(PARALLEL), interval(...):
+        gx = 0.5 * (ke[1, 0, 0] - ke[-1, 0, 0] + pe[1, 0, 0] - pe[-1, 0, 0]) * rdx
+        gy = 0.5 * (ke[0, 1, 0] - ke[0, -1, 0] + pe[0, 1, 0] - pe[0, -1, 0]) * rdy
+        lapu = u[1, 0, 0] + u[-1, 0, 0] + u[0, 1, 0] + u[0, -1, 0] - 4.0 * u[0, 0, 0]
+        lapv = v[1, 0, 0] + v[-1, 0, 0] + v[0, 1, 0] + v[0, -1, 0] - 4.0 * v[0, 0, 0]
+        u = u[0, 0, 0] + dt * (vort[0, 0, 0] * v[0, 0, 0] - gx) \
+            + damp[0, 0, 0] * lapu
+        v = v[0, 0, 0] - dt * (vort[0, 0, 0] * u[0, 0, 0] + gy) \
+            + damp[0, 0, 0] * lapv
+
+
+# ---------------------------------------------------------------------------
+# riem_solver_c: semi-implicit vertical solver (tridiagonal, §VIII-B)
+# ---------------------------------------------------------------------------
+
+
+@gtstencil
+def precompute_pe(delp: Field, pe: Field, ptop: Param):
+    """Hydrostatic interface pressure: forward vertical integration."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            pe = ptop
+        with interval(1, None):
+            pe = pe[0, 0, -1] + delp[0, 0, -1]
+
+
+@gtstencil
+def riem_coeffs(delp: Field, ptc: Field, aa: Field, bb: Field, cc: Field,
+                rhs: Field, w: Field, beta: Param):
+    """Tridiagonal coefficients for the implicit w / pressure-perturbation
+    solve (structure of riem_solver_c's semi-implicit discretization)."""
+    with computation(PARALLEL):
+        with interval(1, -1):
+            aa = -ptc[0, 0, -1] / (0.5 * (delp[0, 0, -1] + delp[0, 0, 0]))
+            cc = -ptc[0, 0, 0] / (0.5 * (delp[0, 0, 0] + delp[0, 0, 1]))
+            bb = beta - (aa + cc)
+            rhs = w[0, 0, 0] * delp[0, 0, 0]
+        with interval(0, 1):
+            aa = 0.0
+            cc = -ptc[0, 0, 0] / delp[0, 0, 0]
+            bb = beta - cc
+            rhs = w[0, 0, 0] * delp[0, 0, 0]
+        with interval(-1, None):
+            aa = -ptc[0, 0, -1] / delp[0, 0, 0]
+            cc = 0.0
+            bb = beta - aa
+            rhs = w[0, 0, 0] * delp[0, 0, 0]
+
+
+@gtstencil
+def tridiag_solve(aa: Field, bb: Field, cc: Field, rhs: Field, pp: Field):
+    """Thomas algorithm (FORWARD elimination, BACKWARD substitution)."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            cc = cc / bb
+            rhs = rhs / bb
+        with interval(1, None):
+            cc = cc / (bb - aa * cc[0, 0, -1])
+            rhs = (rhs - aa * rhs[0, 0, -1]) / (bb - aa * cc[0, 0, -1])
+    with computation(BACKWARD):
+        with interval(-1, None):
+            pp = rhs
+        with interval(0, -1):
+            pp = rhs[0, 0, 0] - cc[0, 0, 0] * pp[0, 0, 1]
+
+
+@gtstencil
+def w_update(w: Field, pp: Field, delp: Field, dt: Param):
+    """Nonhydrostatic w update from the solved pressure perturbation."""
+    with computation(PARALLEL):
+        with interval(0, -1):
+            w = w[0, 0, 0] + dt * (pp[0, 0, 1] - pp[0, 0, 0]) / delp[0, 0, 0]
+        with interval(-1, None):
+            w = w[0, 0, 0] - dt * pp[0, 0, 0] / delp[0, 0, 0]

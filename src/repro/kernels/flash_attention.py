@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Online-softmax blocked attention: grid (batch×heads, Q blocks); the kernel
+loops over KV blocks ≤ the causal frontier, carrying (m, l, acc) in VREGs
+and keeping one (block_q, d) × (block_k, d) working set in VMEM.
+
+MXU alignment: block_q/block_k multiples of 128, d_head ≥ 64.  GQA is
+handled by the wrapper (kv head broadcast via index mapping, no copy).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+            seq_len: int, scale: float, softcap: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    m = jnp.full((block_q,), -1e30, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros_like(q)
+    n_kv = seq_len // block_k
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+
+    def body(kv_i, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], kv_i * block_k, block_k, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], kv_i * block_k, block_k, axis=0).astype(jnp.float32)
+        s = q @ k.T                                     # (bq, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # causal frontier: only KV blocks with start ≤ q block end
+    hi = jnp.minimum((qi + 1) * block_q // block_k + 1, n_kv)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m, l, acc))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, block_q: int = 128,
+                           block_k: int = 128, softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, KVH, D) with H % KVH == 0.  Causal."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * KVH, S, D)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * KVH, S, D)
+    grid = (B * H, S // bq)
+
+    q_spec = pl.BlockSpec((1, bq, D), lambda h, i: (h, i, 0))
+    kv_spec = pl.BlockSpec((1, S, D), lambda h, i, rep=rep: (h // rep, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, seq_len=S,
+                          scale=scale, softcap=softcap),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out.reshape(B, H, S, D), 1, 2)

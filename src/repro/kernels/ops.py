@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (CPU validation); pass False on real TPUs.
+Each op falls back to its jnp oracle under ``backend="ref"`` so callers can
+A/B the kernels in place.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .fvt_flux import fvt_flux_pallas
+from .rmsnorm import rmsnorm_pallas, rmsnorm_residual_pallas
+from .ssm_scan import ssm_state_scan_pallas
+from .tridiag import tridiag_pallas
+
+
+@partial(jax.jit, static_argnames=("backend", "interpret", "block_j"))
+def tridiag(a, b, c, d, *, backend="pallas", interpret=True, block_j=8):
+    if backend == "ref":
+        return ref.tridiag_ref(a, b, c, d)
+    return tridiag_pallas(a, b, c, d, block_j=block_j, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("halo", "backend", "interpret", "block_k"))
+def fvt_flux(q, cx, *, halo, backend="pallas", interpret=True, block_k=8):
+    if backend == "ref":
+        return ref.fvt_flux_ref(q, cx, halo=halo)
+    return fvt_flux_pallas(q, cx, halo=halo, block_k=block_k,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("softcap", "backend", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, softcap=0.0, backend="pallas",
+                    interpret=True, block_q=128, block_k=128):
+    if backend == "ref":
+        return ref.flash_attention_ref(q, k, v, softcap=softcap)
+    return flash_attention_pallas(q, k, v, softcap=softcap, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "backend", "interpret",
+                                   "block_rows"))
+def rmsnorm(x, w, *, eps=1e-5, backend="pallas", interpret=True,
+            block_rows=128):
+    if backend == "ref":
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "backend", "interpret",
+                                   "block_rows"))
+def rmsnorm_residual(x, residual, w, *, eps=1e-5, backend="pallas",
+                     interpret=True, block_rows=128):
+    if backend == "ref":
+        return ref.rmsnorm_residual_ref(x, residual, w, eps=eps)
+    return rmsnorm_residual_pallas(x, residual, w, eps=eps,
+                                   block_rows=block_rows,
+                                   interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("backend", "interpret", "block_h"))
+def ssm_state_scan(states, decay, *, backend="pallas", interpret=True,
+                   block_h=8):
+    if backend == "ref":
+        return ref.ssm_state_scan_ref(states, decay)
+    return ssm_state_scan_pallas(states, decay, block_h=block_h,
+                                 interpret=interpret)

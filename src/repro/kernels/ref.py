@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def tridiag_ref(a, b, c, d):
+    """Thomas algorithm via lax.scan over K; (K, J, I) arrays."""
+    nk = a.shape[0]
+
+    def fwd(carry, idx):
+        cp_prev, dp_prev = carry
+        k = idx
+        denom = b[k] - a[k] * cp_prev
+        cp = jnp.where(k == 0, c[k] / b[k], c[k] / denom)
+        dp = jnp.where(k == 0, d[k] / b[k],
+                       (d[k] - a[k] * dp_prev) / denom)
+        return (cp, dp), (cp, dp)
+
+    zero = jnp.zeros_like(a[0])
+    (_, _), (cps, dps) = jax.lax.scan(fwd, (zero, zero), jnp.arange(nk))
+
+    def bwd(x_next, idx):
+        k = nk - 1 - idx
+        x = jnp.where(k == nk - 1, dps[k], dps[k] - cps[k] * x_next)
+        return x, x
+
+    _, xs = jax.lax.scan(bwd, zero, jnp.arange(nk))
+    return xs[::-1]
+
+
+def fvt_flux_ref(q, cx, *, halo: int):
+    """Unfused al_x → fx_ppm chain (matches repro.fv3.stencils)."""
+    nk, njp, nip = q.shape
+    h = halo
+    ni = nip - 2 * h
+
+    def sh(arr, di):
+        return arr[:, :, h + di:h + di + ni]
+
+    def al(di):
+        return (7.0 / 12.0) * (sh(q, di - 1) + sh(q, di)) \
+            - (1.0 / 12.0) * (sh(q, di - 2) + sh(q, di + 1))
+
+    al0, al1 = al(0), al(1)
+    q0, qm1 = sh(q, 0), sh(q, -1)
+    bl = al0 - q0
+    br = al1 - q0
+    b0 = bl + br
+    blm1 = al(-1) - qm1
+    brm1 = al0 - qm1
+    b0m1 = blm1 + brm1
+    c = sh(cx, 0)
+    f = jnp.where(c > 0.0,
+                  qm1 + (1.0 - c) * (brm1 - c * b0m1),
+                  q0 - (1.0 + c) * (bl + c * b0))
+    f = jnp.clip(f, jnp.minimum(qm1, q0), jnp.maximum(qm1, q0))
+    out = jnp.zeros_like(q)
+    return out.at[:, :, h:h + ni].set(c * f)
+
+
+def flash_attention_ref(q, k, v, *, softcap: float = 0.0):
+    """Materialized causal attention; q (B,S,H,D), k/v (B,S,KVH,D)."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, residual, w, *, eps: float = 1e-5):
+    s = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    return rmsnorm_ref(s, w, eps=eps).astype(x.dtype), s.astype(x.dtype)
+
+
+def ssm_state_scan_ref(states, decay):
+    """lax.scan form of the inter-chunk recurrence (exclusive prefix)."""
+    def f(h, inp):
+        st, dec = inp
+        return h * dec[..., None, None] + st, h
+
+    h0 = jnp.zeros_like(states[0])
+    _, prev = jax.lax.scan(f, h0, (states, decay))
+    return prev

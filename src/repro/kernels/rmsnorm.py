@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused RMSNorm (+ optional residual add).
+
+Fusing the normalization with the residual add removes one full read+write
+of the activation tensor — the §VI-A.2 "local storage" transform applied to
+the LM stack's most frequent elementwise motif.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def _kernel_residual(x_ref, r_ref, w_ref, o_ref, ro_ref, *, eps: float):
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    ro_ref[...] = s.astype(ro_ref.dtype)
+    var = jnp.mean(s * s, axis=-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, w, *, eps: float = 1e-5, block_rows: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """x: (..., rows, d); w: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    rows = x2.shape[0]
+    br = block_rows if rows % block_rows == 0 else rows
+    grid = (rows // br,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(shape)
+
+
+def rmsnorm_residual_pallas(x, residual, w, *, eps: float = 1e-5,
+                            block_rows: int = 128,
+                            interpret: bool = True):
+    """Fused (x + residual) → rmsnorm.  Returns (normed, new_residual)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    r2 = residual.reshape(-1, d)
+    rows = x2.shape[0]
+    br = block_rows if rows % block_rows == 0 else rows
+    grid = (rows // br,)
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    normed, resid = pl.pallas_call(
+        functools.partial(_kernel_residual, eps=eps),
+        grid=grid,
+        in_specs=[row_spec, row_spec, pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=[row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, d), x.dtype),
+                   jax.ShapeDtypeStruct((rows, d), x.dtype)],
+        interpret=interpret,
+    )(x2, r2, w)
+    return normed.reshape(shape), resid.reshape(shape)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: SSD inter-chunk state scan (Mamba-2 sequential core).
+
+The matmul-rich intra-chunk work of SSD is MXU-friendly as plain XLA ops;
+the *sequential* inter-chunk recurrence  h_c = decay_c ⊙ h_{c-1} + s_c  is
+the latency-bound piece.  This kernel runs it with the running state pinned
+in VMEM/VREGs across all chunks — one HBM read per chunk input, one write
+per emitted prefix state, zero re-reads of h (paper §VI-A.2(3) applied to
+the LM-side "vertical solver", DESIGN.md §5).
+
+Shapes: states (nc, B, H, N, P) f32; decay (nc, B, H) f32.
+Grid: (B, H // block_h); emits prefix states (exclusive) like lax.scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(st_ref, dec_ref, out_ref, *, nc: int):
+    # block layout: states (nc,1,bh,N,P), decay (nc,1,bh); h: (bh,N,P)
+    h = jnp.zeros_like(st_ref[0, 0])
+
+    def body(c, h):
+        out_ref[c, 0] = h
+        d = dec_ref[c, 0]                                # (bh,)
+        return h * d[:, None, None] + st_ref[c, 0]
+
+    jax.lax.fori_loop(0, nc, body, h)
+
+
+def ssm_state_scan_pallas(states, decay, *, block_h: int = 8,
+                          interpret: bool = True) -> jax.Array:
+    """Exclusive prefix scan of  h ← decay·h + state  over chunk axis.
+
+    states: (nc, B, H, N, P); decay: (nc, B, H).  Returns (nc, B, H, N, P)
+    of states *before* each chunk (matching lax.scan's emitted carry).
+    """
+    nc, B, H, N, P = states.shape
+    bh = block_h if H % block_h == 0 else H
+    grid = (B, H // bh)
+    st_spec = pl.BlockSpec((nc, 1, bh, N, P), lambda b, h: (0, b, h, 0, 0))
+    dec_spec = pl.BlockSpec((nc, 1, bh), lambda b, h: (0, b, h))
+    return pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[st_spec, dec_spec],
+        out_specs=st_spec,
+        out_shape=jax.ShapeDtypeStruct(states.shape, states.dtype),
+        interpret=interpret,
+    )(states, decay)

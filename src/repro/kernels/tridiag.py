@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: batched Thomas (tridiagonal) solver.
+
+The hand-tuned version of the FV3 Riemann-solver hot spot (paper §VIII-B):
+one kernel invocation per J-tile of columns, full-K block in VMEM, forward
+elimination + back substitution with the loop carries held in VREGs —
+the paper's §VI-A.2(3) local-storage transform, explicitly.
+
+Layout: (K, J, I) with I on lanes (the paper's I-contiguous finding).
+Block: (nk, bj, ni); grid over J tiles.  Eliminated coefficients cp are
+staged in a second output block (VMEM) for the back-substitution sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, c_ref, d_ref, x_ref, cp_ref, *, nk: int):
+    cp0 = c_ref[0] / b_ref[0]
+    dp0 = d_ref[0] / b_ref[0]
+    cp_ref[0] = cp0
+    x_ref[0] = dp0
+
+    def fwd(k, carry):
+        cp_prev, dp_prev = carry                 # VREG-resident carries
+        ak = a_ref[k]
+        denom = b_ref[k] - ak * cp_prev
+        cp = c_ref[k] / denom
+        dp = (d_ref[k] - ak * dp_prev) / denom
+        cp_ref[k] = cp
+        x_ref[k] = dp
+        return cp, dp
+
+    cp_last, dp_last = jax.lax.fori_loop(1, nk, fwd, (cp0, dp0))
+
+    def bwd(i, x_next):
+        k = nk - 2 - i
+        xk = x_ref[k] - cp_ref[k] * x_next
+        x_ref[k] = xk
+        return xk
+
+    jax.lax.fori_loop(0, nk - 1, bwd, dp_last)
+
+
+def tridiag_pallas(a, b, c, d, *, block_j: int = 8,
+                   interpret: bool = True) -> jax.Array:
+    """Solve tridiag(a, b, c) x = d for (K, J, I) arrays, batched over JI."""
+    nk, nj, ni = a.shape
+    bj = block_j if nj % block_j == 0 else nj
+    grid = (nj // bj,)
+    spec = pl.BlockSpec((nk, bj, ni), lambda j: (0, j, 0))
+    kern = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype),
+                   jax.ShapeDtypeStruct(a.shape, a.dtype)],
+        interpret=interpret,
+    )(a, b, c, d)[0]

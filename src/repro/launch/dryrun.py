@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell with ShapeDtypeStruct stand-ins (no allocation), print
+``memory_analysis()`` and ``cost_analysis()``, and record collective bytes
+parsed from the partitioned HLO — the inputs to §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite_8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--fv3]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.models.config import SHAPE_BY_NAME, ArchConfig, ShapeSpec
+from repro.parallel.sharding import (abstract_params, dp_axes,
+                                     param_shardings)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, TrainState, make_train_step
+from repro.launch.mesh import make_fv3_mesh, make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|f64|bf16|f16|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "f64": 8, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in partitioned HLO."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\(?)((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:, )?)+)\)?\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", stripped)
+        if not m:
+            continue
+        kind = m.group(3)
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(m.group(2)):
+            dims = dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dm.group(1)]
+        out[kind] += nbytes
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input (per brief)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: ArchConfig, shape: ShapeSpec, mesh) -> dict:
+    """Abstract inputs for the given cell; every leaf carries its sharding."""
+    dps = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = NamedSharding(mesh, P(dps, None))
+    rep = NamedSharding(mesh, P())
+    i32 = jnp.int32
+
+    def tok(shp, sharding):
+        return jax.ShapeDtypeStruct(shp, i32, sharding=sharding)
+
+    npre = arch.n_prefix_embeds
+    if shape.kind == "train":
+        specs = {"tokens": tok((B, S - npre if npre else S), tok_sh),
+                 "labels": tok((B, S - npre if npre else S), tok_sh)}
+        if npre:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (B, npre, arch.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, P(dps, None, None)))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok((B, S - npre if npre else S), tok_sh)}
+        if npre:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (B, npre, arch.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, P(dps, None, None)))
+        return specs
+    # decode: 1 new token against a seq_len cache
+    n_dp = int(np.prod([mesh.shape[a] for a in dps]))
+    long_ctx = B < n_dp
+    tp = mesh.shape["model"]
+    caches = jax.eval_shape(lambda: T.init_caches(arch, B, S))
+    dp_or_none = None if long_ctx else dps
+
+    def cache_spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        rank = len(leaf.shape)
+        if ("k" in names or "v" in names) and rank == 5:   # KV (G,B,S,kv,dh)
+            if long_ctx:
+                return P(None, None, dps + ("model",), None, None)
+            return P(None, dps, "model", None, None)
+        if "ssm" in names:                                 # (G,B,H,N,P)
+            return P(None, dp_or_none,
+                     "model" if leaf.shape[2] % tp == 0 else None, None, None)
+        if "conv" in names:                                # (G,B,K-1,C)
+            return P(None, dp_or_none, None,
+                     "model" if leaf.shape[-1] % tp == 0 else None)
+        if "C" in names and rank == 5:                     # mlstm (G,B,H,dk,dv)
+            return P(None, dp_or_none, None,
+                     "model" if leaf.shape[3] % tp == 0 else None, None)
+        if "n" in names and rank == 4:                     # mlstm n (G,B,H,dk)
+            return P(None, dp_or_none, None,
+                     "model" if leaf.shape[3] % tp == 0 else None)
+        if rank == 3:                                      # slstm h/c/n/m (G,B,D)
+            return P(None, dp_or_none,
+                     "model" if leaf.shape[2] % tp == 0 else None)
+        return P()
+
+    cache_specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, cache_spec(path, leaf))),
+        caches)
+    tok_sharding = rep if B % n_dp else tok_sh
+    return {"token": tok((B, 1), tok_sharding), "caches": cache_specs,
+            "pos": jax.ShapeDtypeStruct((), i32, sharding=rep)}
+
+
+def state_specs(arch: ArchConfig, mesh, dtype=jnp.float32):
+    """Abstract TrainState with shardings (params + optimizer)."""
+    defs = T.model_pdefs(arch)
+    params = abstract_params(defs, mesh, dtype)
+    from repro.train import optimizer as O
+
+    opt_shape = jax.eval_shape(
+        lambda p: O.opt_init(arch.optimizer, p),
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), params))
+
+    shard_by_shape = {}
+    for leaf in jax.tree.leaves(params):
+        shard_by_shape.setdefault(leaf.shape, leaf.sharding)
+
+    def opt_sharding(leaf):
+        if leaf.shape in shard_by_shape:
+            return shard_by_shape[leaf.shape]
+        # factored stats / counts: replicate reduced shapes unless a prefix
+        # match of a param sharding applies
+        return NamedSharding(mesh, P())
+
+    opt = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                       sharding=opt_sharding(l)), opt_shape)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return TrainState(params, opt, step)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh):
+    """(callable, example_args, donate) for one cell."""
+    arch = get_config(arch_id)
+    shape = SHAPE_BY_NAME[shape_name]
+    dps = dp_axes(mesh)
+    if shape.kind == "train":
+        tcfg = TrainConfig(grad_accum=(16 if arch.d_model >= 6000 else 8))
+        specs = param_shardings(T.model_pdefs(arch), mesh)
+        step = make_train_step(arch, tcfg, dp_axes=dps, param_specs=specs)
+        state = state_specs(arch, mesh)
+        batch = input_specs(arch, shape, mesh)
+        return step, (state, batch), (0,)
+    params = abstract_params(T.model_pdefs(arch), mesh, jnp.bfloat16)
+    ins = input_specs(arch, shape, mesh)
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens, prefix=None):
+            return T.prefill(params, tokens, arch, prefix_embeds=prefix,
+                             dp_axes=dps)
+        args = (params, ins["tokens"])
+        if "prefix" in ins:
+            args = args + (ins["prefix"],)
+        return prefill_step, args, ()
+
+    def serve_step(params, token, caches, pos):
+        return T.decode_step(params, token, caches, pos, arch, dp_axes=dps)
+
+    return serve_step, (params, ins["token"], ins["caches"], ins["pos"]), (2,)
+
+
+def cell_active(arch: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not arch.long_context_ok:
+        return False, ("skipped: pure full-attention arch — 500k decode "
+                       "requires sub-quadratic attention per the brief "
+                       "(see DESIGN.md §5)")
+    return True, ""
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    arch = get_config(arch_id)
+    shape = SHAPE_BY_NAME[shape_name]
+    active, reason = cell_active(arch, shape)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "active": active}
+    if not active:
+        rec["skip_reason"] = reason
+        _save(rec, save)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, donate = build_cell(arch_id, shape_name, mesh)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory_analysis"] = _mem_dict(mem)
+        rec["cost_analysis"] = {k: float(v) for k, v in (cost or {}).items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals",
+                                          "utilization operand 0")}
+        rec["collectives"] = collective_bytes(hlo)
+        rec["n_devices"] = mesh.size
+        rec["ok"] = True
+        print(f"[OK] {arch_id} × {shape_name} × {mesh_name}: "
+              f"{rec['compile_s']}s  flops={rec['cost_analysis'].get('flops', 0):.3e} "
+              f"coll={rec['collectives']['total_bytes']:.3e}B")
+        if mem is not None:
+            print(f"     memory: {rec['memory_analysis']}")
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch_id} × {shape_name} × {mesh_name}: {rec['error']}")
+    _save(rec, save)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def _save(rec: dict, save: bool):
+    if not save:
+        return
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (RESULTS / name).write_text(json.dumps(rec, indent=1))
+
+
+def run_fv3(*, multi_pod: bool, save: bool = True) -> dict:
+    """FV3 dry-run on its topology-locked mesh (+ ensemble axis for
+    multi-pod)."""
+    from repro.fv3.dyncore import (FV3Config, all_state_fields,
+                                   make_step_distributed)
+
+    mesh_name = "fv3_ens2x6x6x6" if multi_pod else "fv3_6x8x8"
+    cfg = FV3Config(npx=192 // 4, nk=80, halo=6,
+                    layout=(6, 6) if multi_pod else (8, 8),
+                    n_split=2, k_split=1)
+    rec = {"arch": "fv3", "shape": f"npx{cfg.npx}x{cfg.nk}", "mesh": mesh_name,
+           "active": True}
+    t0 = time.time()
+    try:
+        mesh = make_fv3_mesh(layout=cfg.layout,
+                             ensemble=2 if multi_pod else 1)
+        step = make_step_distributed(cfg, mesh, ensemble=multi_pod)
+        py, px = cfg.layout
+        nlp = cfg.n_local + 2 * cfg.halo
+        shp = (6, py, px, cfg.nk, nlp, nlp)
+        if multi_pod:
+            shp = (2,) + shp
+        spec = P("ens", "tile", "y", "x") if multi_pod else P("tile", "y", "x")
+        fields = all_state_fields(cfg)
+        state = {k: jax.ShapeDtypeStruct(
+            shp, jnp.float32, sharding=NamedSharding(mesh, spec))
+            for k in fields}
+        lowered = step.lower(state)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory_analysis"] = _mem_dict(compiled.memory_analysis())
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in (cost or {}).items()
+                                if isinstance(v, (int, float))}
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["n_devices"] = mesh.size
+        rec["ok"] = True
+        print(f"[OK] fv3 × {mesh_name}: {rec['compile_s']}s "
+              f"coll={rec['collectives']['total_bytes']:.3e}B")
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] fv3 × {mesh_name}: {rec['error']}")
+    _save(rec, save)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fv3", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    results = []
+    if args.fv3:
+        for mp in meshes:
+            results.append(run_fv3(multi_pod=mp))
+    elif args.all:
+        for mp in meshes:
+            for arch in ARCH_IDS:
+                for shape in ("train_4k", "prefill_32k", "decode_32k",
+                              "long_500k"):
+                    results.append(run_cell(arch, shape, multi_pod=mp))
+            results.append(run_fv3(multi_pod=mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            results.append(run_cell(args.arch, args.shape, multi_pod=mp))
+    n_ok = sum(r.get("ok", False) for r in results)
+    n_skip = sum(not r["active"] for r in results)
+    print(f"\n{n_ok} ok / {n_skip} skipped / "
+          f"{len(results) - n_ok - n_skip} failed of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

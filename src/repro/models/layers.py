@@ -1,0 +1,326 @@
+"""Transformer layer primitives: norms, RoPE, GQA attention (global/local,
+softcap, caches), dense MLPs and GShard-style MoE.
+
+Sharding strategy (resolved against the production mesh in
+``repro/parallel/sharding.py``):
+ * every 2-D weight shards (in_dim → "data" [FSDP/ZeRO-3], out_dim → "model"
+   [TP]) — all assigned archs have feature dims divisible by 16;
+ * attention K/V activations shard their *sequence* dim over "model"
+   (flash-decoding-style distributed softmax) — the universally valid
+   policy; heads-sharding is the hillclimb variant for divisible archs;
+ * attention runs as a ``lax.scan`` over query chunks (online accumulation)
+   so peak score memory is O(q_chunk × S / tp) — mandatory at 32k+.
+
+Everything is pure jnp: Pallas kernels in ``repro/kernels`` are drop-in
+replacements on real TPUs (validated against these functions as oracles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axes, resolved by parallel layer
+    init_scale: float = 0.02
+
+    def replicate(self) -> "ParamDef":
+        return ParamDef(self.shape, (None,) * len(self.shape), self.init_scale)
+
+
+def stack_defs(defs: dict, n: int) -> dict:
+    """Add a leading stacked-layers axis to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init_scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms / position embeddings / softcap
+# ---------------------------------------------------------------------------
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op without a mesh
+    context (single-device smoke tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or getattr(mesh, "empty", True):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*entries))
+    except (RuntimeError, AttributeError):
+        return x
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_pdefs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs = {
+        "wq": ParamDef((d, cfg.q_dim), ("fsdp", "tp")),
+        "wk": ParamDef((d, cfg.kv_dim), ("fsdp", "tp")),
+        "wv": ParamDef((d, cfg.kv_dim), ("fsdp", "tp")),
+        "wo": ParamDef((cfg.q_dim, d), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((cfg.q_dim,), ("tp",))
+    return defs
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    B = x.shape[0]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, -1, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    B, S, K, D = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, K, n_rep, D)
+                            ).reshape(B, S, K * n_rep, D)
+
+
+def attention(p, x, cfg: ArchConfig, *, local: bool, q_chunk: int = 512,
+              dp_axes=("data",)) -> jax.Array:
+    """Causal (optionally sliding-window) attention, scanned over Q chunks.
+
+    K/V sequence shards over "model"; scores psum through GSPMD's partial
+    softmax.  Peak memory per device: q_chunk × S / tp scores.
+    """
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    # K/V: sequence over "model" (universal policy)
+    k = constrain(k, dp_axes, "model", None, None)
+    v = constrain(v, dp_axes, "model", None, None)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    qc = min(q_chunk, S)
+    assert S % qc == 0
+    n_chunks = S // qc
+    q = q.reshape(B, n_chunks, qc, cfg.n_heads, cfg.d_head)
+    kpos = jnp.arange(S)
+
+    def chunk_body(carry, inputs):
+        qi, idx = inputs
+        qpos = idx * qc + jnp.arange(qc)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = softcap(scores, cfg.attn_softcap)
+        mask = kpos[None, :] <= qpos[:, None]
+        if local and cfg.window:
+            mask &= kpos[None, :] > (qpos[:, None] - cfg.window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return carry, out
+
+    # rematerialize per-chunk scores in the backward pass: without this the
+    # scan saves probs for EVERY chunk at once (O(S²) residuals)
+    chunk_body = jax.checkpoint(
+        chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(chunk_body, 0.,
+                           (jnp.moveaxis(q, 1, 0), jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.q_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, *,
+                     local: bool, dp_axes=("data",), k_scale=None,
+                     v_scale=None):
+    """One-token decode against a (B, S_cache, kv, D) cache; ``pos`` is the
+    scalar write position (uniform across the batch).
+
+    Local layers use a ring buffer of length ``window`` (gemma2's bounded
+    KV), global layers a full-length cache whose sequence dim inherits its
+    input sharding — at 500k/batch=1 that is "model"(+data), and GSPMD
+    derives the flash-decoding-style distributed softmax from it.
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    S_cache = cache_k.shape[1]
+    slot = pos % S_cache if (local and cfg.window) else pos
+    if cache_k.dtype == jnp.int8:
+        # int8 KV cache (per-head scales): quantize the new token, read the
+        # cache as int8 and dequantize fused into the attention matmuls —
+        # halves the dominant HBM term for long-context decode (§Perf H1)
+        k = jnp.clip(jnp.round(k / k_scale), -127, 127)
+        v = jnp.clip(jnp.round(v / v_scale), -127, 127)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if cache_k.dtype == jnp.int8:
+        kk = _repeat_kv(cache_k.astype(x.dtype) * k_scale.astype(x.dtype),
+                        n_rep)
+        vv = _repeat_kv(cache_v.astype(x.dtype) * v_scale.astype(x.dtype),
+                        n_rep)
+    else:
+        kk = _repeat_kv(cache_k, n_rep)
+        vv = _repeat_kv(cache_v, n_rep)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    kpos = jnp.arange(S_cache)
+    if local and cfg.window:
+        valid = (pos >= S_cache) | (kpos <= pos)  # ring: all live once wrapped
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp_pdefs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wi": ParamDef((d, f), ("fsdp", "tp")),
+                "wg": ParamDef((d, f), ("fsdp", "tp")),
+                "wo": ParamDef((f, d), ("tp", "fsdp"))}
+    return {"wi": ParamDef((d, f), ("fsdp", "tp")),
+            "wo": ParamDef((f, d), ("tp", "fsdp"))}
+
+
+def mlp(p, x, cfg: ArchConfig) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+def moe_pdefs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.moe.n_experts
+    defs = {
+        "router": ParamDef((d, E), ("fsdp", None)),
+        "wi": ParamDef((E, d, f), (None, "fsdp", "tp")),
+        "wg": ParamDef((E, d, f), (None, "fsdp", "tp")),
+        "wo": ParamDef((E, f, d), (None, "tp", "fsdp")),
+    }
+    if cfg.act == "gelu":
+        del defs["wg"]
+    if cfg.moe.shared_expert:
+        defs["shared"] = mlp_pdefs(cfg)
+    return defs
+
+
+def moe(p, x, cfg: ArchConfig, *, token_chunk: int = 8192) -> jax.Array:
+    """GShard-style dispatch/combine einsum MoE, scanned over token chunks.
+
+    Dense one-hot dispatch is the TPU-native formulation (no dynamic
+    gather/scatter → no surprise collectives under GSPMD); the dispatch
+    einsum overhead is E·C/(k·3·F) ≤ ~5–20% of expert FLOPs for the
+    assigned configs.  Capacity is per-chunk (local load balancing).
+    """
+    mc: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    tc = min(token_chunk, T)
+    assert T % tc == 0
+    E, K = mc.n_experts, mc.top_k
+    C = max(1, int(tc * K / E * mc.capacity_factor))
+    C = min(C, tc)
+
+    def chunk_fn(carry, xc):
+        logits = (xc @ p["router"].astype(xc.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)       # (tc, K)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (tc,K,E)
+        # position of each (token, slot) in its expert queue
+        pos = jnp.cumsum(onehot.reshape(tc * K, E), axis=0).reshape(
+            tc, K, E) * onehot - 1.0
+        keep = (pos >= 0) & (pos < C)
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * \
+            keep[..., None].astype(jnp.float32)
+        dispatch = jnp.einsum("tke,tkec->tec", onehot, pos_oh)   # (tc,E,C)
+        combine = jnp.einsum("tk,tke,tkec->tec",
+                             gate_vals.astype(jnp.float32), onehot, pos_oh)
+        expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(xc.dtype), xc)
+        h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xc.dtype))
+        if "wg" in p:
+            g = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"].astype(xc.dtype))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xc.dtype))
+        yc = jnp.einsum("tec,ecd->td", combine.astype(xc.dtype), out_e)
+        return carry, yc
+
+    xcs = xt.reshape(T // tc, tc, D)
+    _, ys = jax.lax.scan(chunk_fn, 0., xcs)
+    y = ys.reshape(B, S, D)
+    if mc.shared_expert:
+        y = y + mlp(p["shared"], x, cfg)
+    return y
+
+
+def ffn_pdefs(cfg: ArchConfig) -> dict:
+    return moe_pdefs(cfg) if cfg.moe else mlp_pdefs(cfg)
+
+
+def ffn(p, x, cfg: ArchConfig) -> jax.Array:
+    return moe(p, x, cfg) if cfg.moe else mlp(p, x, cfg)

@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD) mixer — chunked matmul-form for train/prefill, O(1)-state
+recurrence for decode [arXiv:2405.21060].
+
+The loop-carried inter-chunk recurrence is the LM-side analogue of the
+paper's vertical solvers: the chunk scan carries the SSM state exactly like
+the Riemann solver carries per-level values (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, SSMConfig
+from .layers import ParamDef
+
+
+def mamba2_pdefs(cfg: ArchConfig) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    H = ssm.n_heads(d)
+    N = ssm.d_state
+    conv_dim = di + 2 * N
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "w_in": ParamDef((d, 2 * di + 2 * N + H), ("fsdp", "tp")),
+        "conv_w": ParamDef((ssm.d_conv, conv_dim), (None, "tp")),
+        "A_log": ParamDef((H,), (None,), init_scale=1.0),
+        "D": ParamDef((H,), (None,), init_scale=1.0),
+        "dt_bias": ParamDef((H,), (None,), init_scale=1.0),
+        "norm_w": ParamDef((di,), (None,), init_scale=0.0),
+        "w_out": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _split_in(p, x, cfg: ArchConfig):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    H = ssm.n_heads(d)
+    N = ssm.d_state
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xin, Bc, Cc, dt
+
+
+def _conv(p, seq, cache=None):
+    """Causal depthwise conv1d over (B, S, C); optional (B, K-1, C) cache."""
+    w = p["conv_w"].astype(seq.dtype)          # (K, C)
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros_like(seq[:, :K - 1])
+    else:
+        pad = cache.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(K))
+    new_cache = full[:, -(K - 1):] if K > 1 else full[:, :0]
+    return jax.nn.silu(out), new_cache
+
+
+def mamba2(p, x, cfg: ArchConfig, *, return_state: bool = False):
+    """Chunked SSD: intra-chunk quadratic term + inter-chunk state scan."""
+    ssm = cfg.ssm
+    B, S, _ = x.shape
+    di = ssm.d_inner(cfg.d_model)
+    H = ssm.n_heads(cfg.d_model)
+    P = ssm.head_dim
+    N = ssm.d_state
+    L = min(ssm.chunk, S)
+    while S % L:  # largest divisor ≤ chunk (ragged prefill lengths)
+        L -= 1
+    nc = S // L
+
+    z, xin, Bc, Cc, dt = _split_in(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_tail = _conv(p, conv_in)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,) negative
+    xh = xin.reshape(B, nc, L, H, P)
+    dt_c = dt.reshape(B, nc, L, H)
+    Bc_c = Bc.reshape(B, nc, L, N)
+    Cc_c = Cc.reshape(B, nc, L, N)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dres = p["D"].astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        """One SSD chunk: intra-chunk quadratic + contribution of carried
+        state h (B,H,N,P).  Scanning keeps the (B,L,L,H) decay tensor to a
+        single chunk — the memory shape XLA must hold at once."""
+        xc, dtc, Bv, Cv = inp                              # (B,L,·)
+        dA = dtc * A                                       # (B,L,H)
+        cum = jnp.cumsum(dA, axis=1)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("bln,bsn->bls", Cv, Bv)            # (B,L,L)
+        att = cb[..., None] * decay                        # (B,L,L,H)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]      # (B,L,H,P)
+        y = jnp.einsum("blsh,bshp->blhp", att, xdt)
+        # inter-chunk: C_t · exp(cum_t) · h
+        y = y + jnp.einsum("bln,blh,bhnp->blhp",
+                           Cv.astype(jnp.float32), jnp.exp(cum), h)
+        y = y + xc.astype(jnp.float32) * Dres[:, None]
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,L,H)
+        st = jnp.einsum("bln,blh,blhp->bhnp",
+                        Bv.astype(jnp.float32), decay_end * dtc,
+                        xc.astype(jnp.float32))
+        h_new = h * jnp.exp(cum[:, -1])[..., None, None] + st
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+         jnp.moveaxis(Bc_c, 1, 0), jnp.moveaxis(Cc_c, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    # gated RMS norm (mamba2's norm-before-out)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_w"].astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_state:
+        # state transposed to cache layout (B,H,N,P); conv tail as cache
+        cache = {"conv": conv_tail, "ssm": h_final}
+        return out, cache
+    return out
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    ssm = cfg.ssm
+    di = ssm.d_inner(cfg.d_model)
+    H = ssm.n_heads(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, di + 2 * ssm.d_state), dtype),
+        "ssm": jnp.zeros((batch, H, ssm.d_state, ssm.head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg: ArchConfig):
+    """Single-token recurrence: h ← exp(dt·A)·h + dt·B ⊗ x ; y = C·h + D·x."""
+    ssm = cfg.ssm
+    B = x.shape[0]
+    di = ssm.d_inner(cfg.d_model)
+    H = ssm.n_heads(cfg.d_model)
+    P, N = ssm.head_dim, ssm.d_state
+    z, xin, Bc, Cc, dt = _split_in(p, x, cfg)              # (B,1,·)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _conv(p, conv_in, cache["conv"])
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                         # (B,H)
+    dA = jnp.exp(dt1 * A)                                  # (B,H)
+    xh = xin[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bv = Bc[:, 0].astype(jnp.float32)                      # (B,N)
+    Cv = Cc[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bv, dt1, xh)
+    h = cache["ssm"] * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h) \
+        + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_w"].astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}

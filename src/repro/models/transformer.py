@@ -1,0 +1,411 @@
+"""Model assembly: pattern-grouped block stack under ``lax.scan``.
+
+A model is ``n_groups`` repetitions of its ``pattern`` (e.g. gemma2's
+("local","attn"), zamba2's ("shared_attn","mamba2"×3)); per-slot params are
+stacked over groups and scanned, keeping HLO size O(pattern) instead of
+O(layers) — essential for 62–81-layer archs × 80 dry-run compiles.
+``shared_attn`` slots reuse one unstacked param set (Zamba2's trick) while
+each application keeps its own KV cache.
+
+Three entry points per architecture (selected by the shape kind):
+  * :func:`loss_fn`      — train_4k   (causal LM loss, chunked vocab xent)
+  * :func:`prefill`      — prefill_32k (logits + caches)
+  * :func:`decode_step`  — decode_32k / long_500k (1 token against caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from . import layers as L
+from . import ssm as SSM
+from . import xlstm as XL
+from .layers import ParamDef, stack_defs
+
+
+def _mixer_slots(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """(slot_name, block_type) for stacked slots (shared_attn excluded)."""
+    out = []
+    for i, b in enumerate(cfg.pattern):
+        if b != "shared_attn":
+            out.append((f"s{i}_{b}", b))
+    return out
+
+
+def _block_pdefs(btype: str, cfg: ArchConfig, with_ffn: bool) -> dict:
+    d = cfg.d_model
+    norm = lambda: ParamDef((d,), (None,), 0.0)
+    if btype in ("attn", "local", "shared_attn"):
+        defs = {"ln1": norm(), "attn": L.attention_pdefs(cfg)}
+        if cfg.post_norm:
+            defs["ln1_post"] = norm()
+        if with_ffn:
+            defs["ln2"] = norm()
+            defs["ffn"] = L.ffn_pdefs(cfg)
+            if cfg.post_norm:
+                defs["ln2_post"] = norm()
+        return defs
+    if btype == "mamba2":
+        return {"ln1": norm(), "mamba": SSM.mamba2_pdefs(cfg)}
+    if btype == "mlstm":
+        return {"ln1": norm(), "mlstm": XL.mlstm_pdefs(cfg)}
+    if btype == "slstm":
+        return {"ln1": norm(), "slstm": XL.slstm_pdefs(cfg)}
+    raise ValueError(btype)
+
+
+def _has_ffn(btype: str, cfg: ArchConfig) -> bool:
+    if cfg.d_ff == 0:
+        return False
+    if btype in ("mamba2", "mlstm", "slstm"):
+        return False  # zamba2/xlstm: FFN lives in the attention/shared block
+    return True
+
+
+def count_params(cfg: ArchConfig) -> int:
+    """Exact parameter count from the real ParamDef tree."""
+    total = 0
+    for d in jax.tree.leaves(model_pdefs(cfg),
+                             is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+def count_active_params(cfg: ArchConfig) -> int:
+    """Active params per token (MoE top-k accounting)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    d, f = cfg.d_model, cfg.d_ff
+    n_mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+    inactive = n_mats * d * f * (cfg.moe.n_experts - cfg.moe.top_k)
+    return total - cfg.n_layers * inactive
+
+
+def model_pdefs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict[str, Any] = {
+        "embed": ParamDef((v, d), ("tp", "fsdp")),
+        "final_norm": ParamDef((d,), (None,), 0.0),
+        "blocks": {},
+    }
+    for slot, btype in _mixer_slots(cfg):
+        defs["blocks"][slot] = stack_defs(
+            _block_pdefs(btype, cfg, _has_ffn(btype, cfg)), cfg.n_groups)
+    if "shared_attn" in cfg.pattern:
+        defs["shared_attn"] = _block_pdefs("shared_attn", cfg, True)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((d, v), ("fsdp", "tp"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(btype: str, p: dict, x, cfg: ArchConfig, dp_axes,
+                 mode: str = "train", cache=None, pos=None):
+    """Returns (x, new_cache_or_None)."""
+    eps = cfg.norm_eps
+    local = btype == "local"
+    new_cache = None
+    if btype in ("attn", "local", "shared_attn"):
+        h = L.rmsnorm(x, p["ln1"], eps)
+        if mode == "train":
+            a = L.attention(p["attn"], h, cfg, local=local, dp_axes=dp_axes)
+        elif mode == "prefill":
+            a, new_cache = _attention_prefill(p["attn"], h, cfg, local,
+                                              dp_axes)
+        else:
+            a, ck, cv = L.attention_decode(p["attn"], h, cache["k"],
+                                           cache["v"], pos, cfg, local=local,
+                                           dp_axes=dp_axes,
+                                           k_scale=cache.get("k_s"),
+                                           v_scale=cache.get("v_s"))
+            new_cache = {"k": ck, "v": cv}
+            if "k_s" in cache:
+                new_cache["k_s"] = cache["k_s"]
+                new_cache["v_s"] = cache["v_s"]
+        if cfg.post_norm:
+            a = L.rmsnorm(a, p["ln1_post"], eps)
+        if cfg.parallel_block and "ffn" in p:
+            f = L.ffn(p["ffn"], L.rmsnorm(x, p["ln2"], eps), cfg)
+            return x + a + f, new_cache
+        x = x + a
+        if "ffn" in p:
+            f = L.ffn(p["ffn"], L.rmsnorm(x, p["ln2"], eps), cfg)
+            if cfg.post_norm:
+                f = L.rmsnorm(f, p["ln2_post"], eps)
+            x = x + f
+        return x, new_cache
+    if btype == "mamba2":
+        h = L.rmsnorm(x, p["ln1"], eps)
+        if mode == "train":
+            return x + SSM.mamba2(p["mamba"], h, cfg), None
+        if mode == "prefill":
+            y, st = SSM.mamba2(p["mamba"], h, cfg, return_state=True)
+            return x + y, st
+        y, st = SSM.mamba2_decode(p["mamba"], h, cache, cfg)
+        return x + y, st
+    if btype == "mlstm":
+        h = L.rmsnorm(x, p["ln1"], eps)
+        if mode in ("train", "prefill"):
+            y = XL.mlstm(p["mlstm"], h, cfg)
+            st = None
+            if mode == "prefill":
+                st = _mlstm_state_from_seq(p["mlstm"], h, cfg)
+            return x + y, st
+        y, st = XL.mlstm_decode(p["mlstm"], h, cache, cfg)
+        return x + y, st
+    if btype == "slstm":
+        h = L.rmsnorm(x, p["ln1"], eps)
+        if mode == "train":
+            return x + XL.slstm(p["slstm"], h, cfg), None
+        if mode == "prefill":
+            y, st = XL.slstm(p["slstm"], h, cfg, return_state=True)
+            return x + y, st
+        y, st = XL.slstm_decode(p["slstm"], h, cache, cfg)
+        return x + y, st
+    raise ValueError(btype)
+
+
+def _attention_prefill(p, h, cfg: ArchConfig, local: bool, dp_axes):
+    """Full attention + KV cache extraction (ring-truncated for local)."""
+    B, S, _ = h.shape
+    out = L.attention(p, h, cfg, local=local, dp_axes=dp_axes)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    _, k, v = L._qkv(p, h, cfg, positions)
+    if local and cfg.window and S > cfg.window:
+        k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+    return out, {"k": k, "v": v}
+
+
+def _mlstm_state_from_seq(p, h, cfg):
+    """Final (C, n) state after a prefill — recompute from gates (cheap
+    relative to the block) so prefill can hand off to decode.
+
+    Inputs stay bf16 across any collectives (the f32 upcast of full-sequence
+    k/v doubled prefill collective bytes — §Perf H2); accumulation is f32
+    via preferred_element_type."""
+    q, k, v, log_f, i_g = XL._mlstm_qkvif(p, h, cfg)
+    cum = jnp.cumsum(log_f, axis=1)
+    w = (jnp.exp(cum[:, -1:] - cum) * i_g).astype(h.dtype)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", w, k, v,
+                   preferred_element_type=jnp.float32)
+    n = jnp.einsum("bsh,bshd->bhd", w, k,
+                   preferred_element_type=jnp.float32)
+    return {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ArchConfig, prefix_embeds=None,
+           dtype=jnp.bfloat16):
+    emb = params["embed"]
+    x = emb[tokens].astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    return x
+
+
+def _unembed(params, h, cfg: ArchConfig):
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if isinstance(w, dict):      # int8-quantized serving path
+        w = dequantize(w)
+    if cfg.tie_embeddings:
+        w = w.T
+    logits = h @ w.astype(h.dtype)
+    return L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def dequantize(tree):
+    """Inverse of :func:`repro.serve.quantize.quantize_params` for a param
+    subtree: {"q": int8, "s": f32 per-out-channel} → bf16."""
+    def is_q(x):
+        return isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def deq(x):
+        if is_q(x):
+            return (x["q"].astype(jnp.bfloat16) * x["s"].astype(jnp.bfloat16))
+        return x
+
+    return jax.tree.map(deq, tree, is_leaf=is_q)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, prefix_embeds=None,
+            dp_axes=("data",), mode: str = "train", caches=None, pos=None,
+            dtype=jnp.bfloat16, seq_shard: bool = False,
+            quantized: bool = False):
+    """Hidden states through the full stack.  Returns (h, new_caches).
+
+    ``seq_shard``: shard the residual stream's sequence dim over "model"
+    between blocks (Korthikanti-style sequence parallelism) — GSPMD turns
+    the per-layer all-reduces into reduce-scatter + all-gather pairs,
+    halving per-chip collective bytes (§Perf hillclimb 2).
+    ``quantized``: params are int8 {"q","s"} pairs; dequantized per group
+    inside the scan so HBM reads the int8 bytes (§Perf hillclimb 1).
+    """
+    if quantized:
+        params = dict(params)
+        for k in ("embed", "unembed", "final_norm", "shared_attn"):
+            if k in params:
+                params[k] = dequantize(params[k])
+    x = _embed(params, tokens, cfg, prefix_embeds, dtype)
+    slots = _mixer_slots(cfg)
+    shared = params.get("shared_attn")
+    has_shared = "shared_attn" in cfg.pattern
+
+    def constrain_stream(x):
+        if seq_shard and mode in ("train", "prefill"):
+            return L.constrain(x, dp_axes, "model", None)
+        return x
+
+    def group_body(carry, xs):
+        x = carry
+        gp = xs["params"]
+        if quantized:
+            gp = dequantize(gp)
+        gc = xs.get("caches") or {}
+        new_caches = {}
+        if has_shared:
+            sc = gc.get("shared")
+            x, nc = _apply_block("shared_attn", shared, x, cfg, dp_axes,
+                                 mode, sc, pos)
+            if nc is not None:
+                new_caches["shared"] = nc
+        for slot, btype in slots:
+            x = constrain_stream(x)
+            x, nc = _apply_block(btype, gp[slot], x, cfg, dp_axes, mode,
+                                 gc.get(slot), pos)
+            if nc is not None:
+                new_caches[slot] = nc
+        return constrain_stream(x), new_caches
+
+    body = group_body
+    if mode == "train" and cfg.remat == "block":
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif mode == "train" and cfg.remat == "dots":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    xs = {"params": params["blocks"]}
+    if caches is not None:
+        xs["caches"] = caches
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, (new_caches if (mode != "train") else None)
+
+
+def loss_fn(params, tokens, labels, cfg: ArchConfig, *,
+            prefix_embeds=None, dp_axes=("data",),
+            vocab_chunk: int = 256, dtype=jnp.bfloat16,
+            seq_shard: bool = False) -> jax.Array:
+    """Causal LM loss; vocab projection + xent chunked over sequence so the
+    (B, S, V) float32 logits tensor never materializes."""
+    h, _ = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                   dp_axes=dp_axes, mode="train", dtype=dtype,
+                   seq_shard=seq_shard)
+    npre = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    h = h[:, npre:]
+    B, S, D = h.shape
+    c = min(vocab_chunk, S)
+    while S % c:  # largest divisor ≤ vocab_chunk (prefix-trimmed lengths)
+        c -= 1
+    hs = h.reshape(B, S // c, c, D)
+    ls = labels.reshape(B, S // c, c)
+
+    def chunk(carry, inp):
+        hc, lc = inp
+        logits = _unembed(params, hc, cfg)            # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(
+        chunk, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0)))
+    return total / (B * S)
+
+
+def prefill(params, tokens, cfg: ArchConfig, *, prefix_embeds=None,
+            dp_axes=("data",), dtype=jnp.bfloat16, seq_shard: bool = False,
+            quantized: bool = False):
+    """Prefill: last-position logits + caches for decode."""
+    h, caches = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                        dp_axes=dp_axes, mode="prefill", dtype=dtype,
+                        seq_shard=seq_shard, quantized=quantized)
+    logits = _unembed(params, h[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg: ArchConfig, *,
+                dp_axes=("data",), dtype=jnp.bfloat16,
+                quantized: bool = False):
+    """One decode step: token (B, 1) int32 against caches at position pos."""
+    h, new_caches = forward(params, token, cfg, dp_axes=dp_axes,
+                            mode="decode", caches=caches, pos=pos,
+                            dtype=dtype, quantized=quantized)
+    logits = _unembed(params, h, cfg)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (decode-shape dry-runs build caches directly)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int,
+                dtype=jnp.bfloat16, quant_kv: bool = False) -> dict:
+    """Cache pytree stacked over groups, matching forward(mode='decode').
+
+    ``quant_kv``: int8 KV with per-head f32 scales (§Perf H1)."""
+    G = cfg.n_groups
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.zeros((G,) + a.shape, a.dtype), tree)
+
+    def kv(S):
+        if quant_kv:
+            return {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head),
+                                   jnp.int8),
+                    "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head),
+                                   jnp.int8),
+                    "k_s": jnp.full((batch, 1, cfg.n_kv_heads, 1), 0.05,
+                                    jnp.float32),
+                    "v_s": jnp.full((batch, 1, cfg.n_kv_heads, 1), 0.05,
+                                    jnp.float32)}
+        return {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head), dtype),
+                "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head), dtype)}
+
+    caches = {}
+    if "shared_attn" in cfg.pattern:
+        caches["shared"] = stack(kv(seq_len))
+    for slot, btype in _mixer_slots(cfg):
+        if btype == "attn":
+            caches[slot] = stack(kv(seq_len))
+        elif btype == "local":
+            caches[slot] = stack(kv(min(cfg.window or seq_len, seq_len)))
+        elif btype == "mamba2":
+            caches[slot] = stack(SSM.mamba2_init_cache(cfg, batch))
+        elif btype == "mlstm":
+            caches[slot] = stack(XL.mlstm_init_cache(cfg, batch))
+        elif btype == "slstm":
+            caches[slot] = stack(XL.slstm_init_cache(cfg, batch))
+    return caches

@@ -1,0 +1,193 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, sequential scan with hidden recurrence) [arXiv:2405.04517].
+
+mLSTM's chunk scan carries (C, n) state across chunks — the same
+loop-carried pattern as the paper's vertical solvers (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import ParamDef
+
+
+def _dims(cfg: ArchConfig):
+    H = cfg.n_heads
+    dh = cfg.d_head
+    return H, dh, H * dh
+
+
+def mlstm_pdefs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H, dh, di = _dims(cfg)
+    return {
+        "wq": ParamDef((d, di), ("fsdp", "tp")),
+        "wk": ParamDef((d, di), ("fsdp", "tp")),
+        "wv": ParamDef((d, di), ("fsdp", "tp")),
+        "wif": ParamDef((d, 2 * H), ("fsdp", None)),
+        "wo": ParamDef((di, d), ("tp", "fsdp")),
+        "ogate": ParamDef((d, di), ("fsdp", "tp")),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, _ = x.shape
+    H, dh, di = _dims(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+    gates = (x @ p["wif"].astype(x.dtype)).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)           # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    i_g = jnp.exp(jax.nn.log_sigmoid(i_raw))              # bounded input gate
+    return q, k, v, log_f, i_g
+
+
+def mlstm(p, x, cfg: ArchConfig, *, chunk: int = 128) -> jax.Array:
+    """Chunked-parallel mLSTM: y_t = (Σ_{s≤t} D_ts (q_t·k_s) v_s) /
+    max(|q_t·n_t|, 1), D_ts = exp(ΣlogF (s,t]) · i_s."""
+    B, S, _ = x.shape
+    H, dh, di = _dims(cfg)
+    L = min(chunk, S)
+    while S % L:  # largest divisor ≤ chunk
+        L -= 1
+    nc = S // L
+    q, k, v, log_f, i_g = _mlstm_qkvif(p, x, cfg)
+    qc = q.reshape(B, nc, L, H, dh)
+    kc = k.reshape(B, nc, L, H, dh)
+    vc = v.reshape(B, nc, L, H, dh)
+    fc = log_f.reshape(B, nc, L, H)
+    ic = i_g.reshape(B, nc, L, H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_body(carry, inp):
+        C, n = carry                                       # (B,H,dk,dv),(B,H,dk)
+        qi, ki, vi, fi, ii = inp
+        cum = jnp.cumsum(fi, axis=1)                       # (B,L,H)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        w = jnp.einsum("blhd,bshd->blsh", qi.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * decay * ii[:, None]
+        y_num = jnp.einsum("blsh,bshd->blhd", w, vi.astype(jnp.float32))
+        y_den = w.sum(axis=2)                              # (B,L,H)
+        qdec = qi.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        y_num = y_num + jnp.einsum("blhd,bhde->blhe", qdec, C)
+        y_den = y_den + jnp.einsum("blhd,bhd->blh", qdec, n)
+        y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)[..., None]
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,L,H)
+        Cs = jnp.einsum("blh,blhd,blhe->bhde", decay_end * ii,
+                        ki.astype(jnp.float32), vi.astype(jnp.float32))
+        ns = jnp.einsum("blh,blhd->bhd", decay_end * ii,
+                        ki.astype(jnp.float32))
+        cd = jnp.exp(cum[:, -1])                           # (B,H)
+        C = C * cd[..., None, None] + Cs
+        n = n * cd[..., None] + ns
+        return (C, n), y
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_body, (C0, n0),
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(fc, 1, 0),
+         jnp.moveaxis(ic, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.sigmoid(x @ p["ogate"].astype(x.dtype))
+    return y @ p["wo"].astype(x.dtype)
+
+
+def mlstm_init_cache(cfg: ArchConfig, batch: int) -> dict:
+    H, dh, _ = _dims(cfg)
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32)}
+
+
+def mlstm_decode(p, x, cache, cfg: ArchConfig):
+    B = x.shape[0]
+    H, dh, di = _dims(cfg)
+    q, k, v, log_f, i_g = _mlstm_qkvif(p, x, cfg)
+    f1 = jnp.exp(log_f[:, 0])                              # (B,H)
+    i1 = i_g[:, 0]
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    q1 = q[:, 0].astype(jnp.float32)
+    C = cache["C"] * f1[..., None, None] \
+        + i1[..., None, None] * jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n = cache["n"] * f1[..., None] + i1[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n)), 1.0)
+    y = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.sigmoid(x @ p["ogate"].astype(x.dtype))
+    return y @ p["wo"].astype(x.dtype), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_pdefs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H, dh, di = _dims(cfg)
+    return {
+        "w_in": ParamDef((d, 4 * d), ("fsdp", "tp")),       # z, i, f, o pre-acts
+        "r": ParamDef((4, H, dh, dh), (None, None, None, None), 0.02),
+        "wo": ParamDef((d, d), ("fsdp", "tp")),
+    }
+
+
+def _slstm_cell(p, xt, state, cfg):
+    """One sLSTM step with exp gating + stabilizer; state = (h, c, n, m)."""
+    H, dh, _ = _dims(cfg)
+    h, c, n, m = state
+    B = xt.shape[0]
+    d = cfg.d_model
+    pre = (xt @ p["w_in"].astype(xt.dtype)).astype(jnp.float32)
+    hh = h.reshape(B, H, dh)
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.stack([jnp.einsum("bhd,hde->bhe", hh, r[g])
+                     for g in range(4)], axis=1).reshape(B, 4 * d)
+    z_r, i_r, f_r, o_r = jnp.split(pre + rec, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_r) + m, i_r)
+    i_s = jnp.exp(i_r - m_new)
+    f_s = jnp.exp(jax.nn.log_sigmoid(f_r) + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm(p, x, cfg: ArchConfig, *, return_state: bool = False):
+    B, S, d = x.shape
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, cfg)
+        # emit bf16: the stacked (S,B,D) sequence crosses TP collectives
+        return new, new[0].astype(x.dtype)
+
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)
+    out = y @ p["wo"].astype(x.dtype)
+    if return_state:
+        return out, dict(zip("hcnm", final))
+    return out
+
+
+def slstm_init_cache(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in "hcnm"}
+
+
+def slstm_decode(p, x, cache, cfg: ArchConfig):
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    new = _slstm_cell(p, x[:, 0], state, cfg)
+    y = new[0][:, None].astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return y, dict(zip("hcnm", new))

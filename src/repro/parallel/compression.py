@@ -1,0 +1,42 @@
+"""Gradient compression with error feedback (DESIGN.md §6).
+
+bf16 compression halves cross-pod all-reduce bytes; the quantization error
+is carried in an f32 residual and re-added next step (error feedback keeps
+SGD unbiased to first order — Seide et al. 2014, Karimireddy et al. 2019).
+
+Under GSPMD the all-reduce happens wherever gradients cross replicated
+axes; compressing the *values* before the optimizer sees them compresses
+exactly those transfers when the reduce is staged through this dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_decompress(grads: Any) -> Any:
+    """Round-trip bf16 (stateless form used in the train step)."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+
+def compress_with_feedback(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Error-feedback form: returns (compressed_grads, new_residual)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = corrected.astype(jnp.bfloat16).astype(jnp.float32)
+        return q, corrected - q
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,85 @@
+"""Logical-axis sharding rules resolved against the production mesh.
+
+Rules (DESIGN.md §6):
+  * "fsdp"  → "data": ZeRO-3 parameter sharding; GSPMD inserts per-layer
+    all-gathers under the group scan (overlapped by the latency-hiding
+    scheduler).  Across pods, params are replicated (grads all-reduce over
+    "pod"), the standard multi-pod posture.
+  * "tp"    → "model": Megatron-style feature-dim sharding; every assigned
+    arch has all TP'd dims divisible by 16.
+  * "layers"/None → replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamDef
+
+RULES = {
+    "fsdp": "data",
+    "tp": "model",
+    "layers": None,
+    None: None,
+}
+
+
+def logical_to_spec(axes: tuple, mesh: Mesh) -> P:
+    entries = []
+    for a in axes:
+        m = RULES.get(a)
+        entries.append(m if (m in mesh.axis_names) else None)
+    return P(*entries)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def param_shardings(defs: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, logical_to_spec(d.axes, mesh)),
+        defs, is_leaf=is_pdef)
+
+
+def abstract_params(defs: Any, mesh: Mesh, dtype=jnp.float32):
+    """ShapeDtypeStructs with shardings — dry-run inputs, no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, dtype,
+            sharding=NamedSharding(mesh, logical_to_spec(d.axes, mesh))),
+        defs, is_leaf=is_pdef)
+
+
+def init_params(defs: Any, key, dtype=jnp.float32):
+    """Real initialization (smoke tests / examples; single device)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, d in zip(keys, leaves):
+        if d.init_scale == 0.0:
+            vals.append(jnp.zeros(d.shape, dtype))
+        elif d.init_scale == 1.0 and len(d.shape) == 1:
+            vals.append(jnp.ones(d.shape, dtype))
+        else:
+            vals.append(jax.random.normal(k, d.shape, dtype) * d.init_scale)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def batch_sharding(mesh: Mesh, *, seq_axis: str | None = None):
+    """Sharding for (B, S, ...) activations: batch over all dp axes; for
+    long-context (batch=1) shard the sequence instead."""
+    dps = dp_axes(mesh)
+    if seq_axis == "seq":
+        return NamedSharding(mesh, P(None, dps))
+    return NamedSharding(mesh, P(dps, None))

@@ -1,0 +1,58 @@
+"""int8 weight-only quantization for serving (§Perf hillclimb 1).
+
+Per-output-channel symmetric int8: w ≈ q · s with s = max|w_col| / 127.
+Dequantization happens per layer group inside the scan, so HBM traffic per
+decoded token is the int8 bytes (≈½ of bf16) — the memory-roofline lever
+for bandwidth-bound decode.
+
+Only ≥2-D weights quantize; norms/scalars/biases stay f32 (accuracy-cheap,
+bytes-negligible).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+
+def quantize_params(params):
+    """bf16/f32 param tree → {"q": int8, "s": f32} pairs for ≥2-D leaves."""
+    def one(p):
+        if getattr(p, "ndim", 0) < 2:
+            return p
+        amax = jnp.max(jnp.abs(p.astype(jnp.float32)), axis=-1, keepdims=True)
+        s = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(p.astype(jnp.float32) / s), -127, 127
+                     ).astype(jnp.int8)
+        return {"q": q, "s": s.astype(jnp.float32)}
+
+    return jax.tree.map(one, params)
+
+
+def quantized_pdefs(defs):
+    """ParamDef tree → abstract quantized tree (for dry-run input specs)."""
+    def one(d):
+        if len(d.shape) < 2:
+            return d
+        return {"q": ParamDef(d.shape, d.axes),
+                "s": ParamDef(d.shape[:-1] + (1,), d.axes[:-1] + (None,))}
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def quantization_error(params) -> float:
+    """Max relative round-trip error (sanity metric)."""
+    qt = quantize_params(params)
+    is_q = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"})
+    leaves_p = jax.tree.leaves(params)
+    leaves_q = jax.tree.leaves(qt, is_leaf=is_q)
+    errs = [0.0]
+    for p, q in zip(leaves_p, leaves_q):
+        if not is_q(q):
+            continue
+        back = q["q"].astype(jnp.float32) * q["s"]
+        denom = float(jnp.maximum(jnp.abs(p.astype(jnp.float32)).max(), 1e-8))
+        errs.append(float(jnp.abs(back - p.astype(jnp.float32)).max()) / denom)
+    return max(errs)

@@ -1,0 +1,68 @@
+"""Elastic scaling and straggler policy (DESIGN.md §6).
+
+On TPU SPMD there is no per-step work stealing: the fault-tolerance unit is
+*checkpoint → reshape mesh → restore*.  This module implements the restore-
+with-reshard path plus the launcher-side policy hooks:
+
+ * :func:`reshard_state` — take a host checkpoint and lay it out on ANY new
+   mesh (fewer or more healthy slices after a failure);
+ * :class:`HeartbeatMonitor` — per-step heartbeat with a timeout policy; a
+   missed heartbeat marks the step failed so the launcher (train driver)
+   checkpoints from the last good state and relaunches on a resized mesh —
+   the straggler-mitigation path for synchronous SPMD (you cannot outrun a
+   straggler inside a step; you can stop scheduling onto it);
+ * :func:`plan_mesh` — pick the largest (data, model) grid that fits the
+   surviving device count while keeping TP intact (model-axis changes would
+   invalidate kernel tuning; data-axis changes only re-shard batch/FSDP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import param_shardings
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              axis_types=None) -> tuple[int, int]:
+    """Largest (data, model) grid with fixed TP that fits ``n_devices``."""
+    data = n_devices // model_parallel
+    if data < 1:
+        raise ValueError(f"need ≥{model_parallel} devices, got {n_devices}")
+    return data, model_parallel
+
+
+def reshard_state(ckpt_dir, like, defs, new_mesh: Mesh, *, step=None):
+    """Elastic restore: checkpoint → new mesh layout."""
+    from .checkpoint import restore_checkpoint
+
+    shardings = param_shardings(defs, new_mesh)
+    return restore_checkpoint(ckpt_dir, like, step=step, shardings=shardings)
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Wall-clock watchdog around the synchronous train step."""
+
+    timeout_s: float = 300.0
+    on_straggle: Callable[[int, float], None] | None = None
+    _last: float = dataclasses.field(default_factory=time.monotonic)
+    strikes: int = 0
+
+    def beat(self, step: int) -> bool:
+        """Call after each completed step; returns False if the step
+        exceeded the timeout (caller should checkpoint + resize)."""
+        now = time.monotonic()
+        dt = now - self._last
+        self._last = now
+        if dt > self.timeout_s:
+            self.strikes += 1
+            if self.on_straggle:
+                self.on_straggle(step, dt)
+            return False
+        return True

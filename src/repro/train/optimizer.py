@@ -1,0 +1,144 @@
+"""Hand-rolled optimizers (no optax dependency): AdamW and Adafactor.
+
+Adafactor's factored second moment is what lets grok-1-314b's optimizer
+state fit 256 chips (DESIGN.md §5); AdamW is the default elsewhere.
+All states inherit the parameter shardings (pure elementwise/row/col ops →
+GSPMD keeps them local).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+class AdafactorState(NamedTuple):
+    vr: Any      # row stats (for ≥2-D params)
+    vc: Any      # col stats
+    v: Any       # full stats (1-D params)
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"           # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+
+
+def _lr_at(cfg: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup, 1), 1.0)
+    return cfg.lr * warm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, jnp.float32)
+    return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state: AdamWState):
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    lr = _lr_at(cfg, count)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(new_m, new_v, count)
+
+
+def adafactor_init(params) -> AdafactorState:
+    def rows(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else \
+            jnp.zeros((0,), jnp.float32)
+
+    def cols(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if p.ndim >= 2 else jnp.zeros((0,), jnp.float32)
+
+    def full(p):
+        return jnp.zeros_like(p, jnp.float32) if p.ndim < 2 else \
+            jnp.zeros((0,), jnp.float32)
+
+    return AdafactorState(jax.tree.map(rows, params),
+                          jax.tree.map(cols, params),
+                          jax.tree.map(full, params),
+                          jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state: AdafactorState):
+    count = state.count + 1
+    decay = 1.0 - (count.astype(jnp.float32)) ** -0.8
+    lr = _lr_at(cfg, count)
+
+    def upd(p, g, vr, vc, v):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if p.ndim >= 2:
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None],
+                              1e-30))
+            step = g32 / jnp.maximum(denom, 1e-30)
+            v_new = v
+        else:
+            v_new = decay * v + (1 - decay) * g2
+            step = g32 / (jnp.sqrt(v_new) + 1e-30)
+            vr, vc = vr, vc
+        # relative step clipping (RMS ≤ 1)
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), vr, vc, v_new
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc, state.v)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(pick(1), pick(2), pick(3), count)
+
+
+def opt_init(kind: str, params):
+    return adamw_init(params) if kind == "adamw" else adafactor_init(params)
+
+
+def opt_update(kind: str, cfg: OptConfig, params, grads, state):
+    if kind == "adamw":
+        return adamw_update(cfg, params, grads, state)
+    return adafactor_update(cfg, params, grads, state)

@@ -1,0 +1,115 @@
+"""FV3 system tests: topology invariants, halo oracle, sequential dycore
+conservation/stability.  (Distributed equivalence runs in
+test_distributed.py via subprocess with 24 fake devices.)"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.fv3.topology import LINKS, face_frame, sphere_center
+from repro.fv3.halo import exchange_reference
+from repro.fv3.dyncore import FV3Config, make_step_sequential
+from repro.fv3.state import init_state, total_mass
+
+
+def test_links_consistent():
+    assert len(LINKS) == 24
+    for (f, e), link in LINKS.items():
+        back = LINKS[(link.g, link.e2)]
+        assert back.g == f and back.e2 == e
+        assert back.reversed == link.reversed
+        M = np.array(link.vec2x2)
+        assert np.allclose(np.abs(np.linalg.det(M)), 1.0)
+        assert np.allclose(M @ np.array(back.vec2x2), np.eye(2))
+
+
+def _fold_point(f, i, j, N):
+    n, ex, ey = face_frame(f)
+    a = (i + 0.5) / N - 0.5
+    b = (j + 0.5) / N - 0.5
+    q = 0.5 * n + a * ex + b * ey
+    if abs(a) > 0.5:
+        q = 0.5 * n + np.sign(a) * 0.5 * ex + b * ey - (abs(a) - 0.5) * n
+    elif abs(b) > 0.5:
+        q = 0.5 * n + a * ex + np.sign(b) * 0.5 * ey - (abs(b) - 0.5) * n
+    return q / np.linalg.norm(q)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 5), st.integers(0, 7), st.integers(0, 2),
+       st.sampled_from(["W", "E", "S", "N"]))
+def test_halo_matches_geometric_fold(face, t, d, edge):
+    """Property: exchanged ghost values equal the field evaluated at the
+    independently computed folded cube-surface point."""
+    N, h = 8, 3
+    coef = np.array([0.3, -1.1, 0.7])
+    arr = np.zeros((6, 1, N + 2 * h, N + 2 * h))
+    for f in range(6):
+        ii, jj = np.meshgrid(np.arange(N), np.arange(N), indexing="ij")
+        pts = sphere_center(f, ii.ravel(), jj.ravel(), N)
+        arr[f, 0, h:h + N, h:h + N] = (pts @ coef).reshape(N, N).T
+    out = np.asarray(exchange_reference({"q": jnp.asarray(arr)}, h)["q"])
+    if edge == "W":
+        gi, gj = -1 - d, t
+    elif edge == "E":
+        gi, gj = N + d, t
+    elif edge == "S":
+        gi, gj = t, -1 - d
+    else:
+        gi, gj = t, N + d
+    p = _fold_point(face, gi, gj, N)
+    got = out[face, 0, h + gj, h + gi]
+    np.testing.assert_allclose(got, p @ coef, atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def small_run():
+    cfg = FV3Config(npx=12, nk=4, halo=6, n_split=2, k_split=1)
+    state = init_state(cfg)
+    step = make_step_sequential(cfg)
+    s = state
+    for _ in range(3):
+        s = step(s)
+    return cfg, state, s
+
+
+def test_dycore_mass_conservation(small_run):
+    cfg, s0, s1 = small_run
+    m0, m1 = total_mass(s0, cfg), total_mass(s1, cfg)
+    assert abs(m1 - m0) / m0 < 1e-5
+
+
+def test_dycore_finite_and_bounded(small_run):
+    cfg, s0, s1 = small_run
+    for k, v in s1.items():
+        arr = np.asarray(v)
+        assert np.isfinite(arr).all(), k
+    h, N = cfg.halo, cfg.npx
+    interior = np.s_[:, :, h:h + N, h:h + N]
+    # tracers stay within initial bounds (monotone transport + remap jitter)
+    for q in cfg.tracers:
+        arr = np.asarray(s1[q])[interior]
+        assert arr.min() > -1e-3 and arr.max() < 1.2
+
+
+def test_dycore_actually_evolves(small_run):
+    cfg, s0, s1 = small_run
+    h, N = cfg.halo, cfg.npx
+    interior = np.s_[:, :, h:h + N, h:h + N]
+    du = np.abs(np.asarray(s1["u"])[interior]
+                - np.asarray(s0["u"])[interior]).max()
+    assert du > 1e-6
+
+
+def test_strength_reduction_does_not_change_dynamics():
+    cfg = FV3Config(npx=8, nk=2, halo=6, n_split=1, k_split=1, n_tracers=1)
+    state = init_state(cfg)
+    s_opt = make_step_sequential(cfg, optimize=True)(state)
+    s_raw = make_step_sequential(cfg, optimize=False)(state)
+    h, N = cfg.halo, cfg.npx
+    interior = np.s_[:, :, h:h + N, h:h + N]
+    for k in ("u", "v", "pt", "delp"):
+        np.testing.assert_allclose(np.asarray(s_opt[k])[interior],
+                                   np.asarray(s_raw[k])[interior],
+                                   rtol=5e-5, atol=5e-5)

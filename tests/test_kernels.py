@@ -1,0 +1,109 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas interpret vs ref.py."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("nk,nj,ni", [(8, 8, 8), (16, 8, 16), (80, 4, 12),
+                                      (5, 3, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_tridiag_sweep(nk, nj, ni, dtype):
+    shape = (nk, nj, ni)
+    a = jnp.asarray(RNG.uniform(0.1, 0.5, shape), dtype)
+    b = jnp.asarray(RNG.uniform(2.0, 3.0, shape), dtype)
+    c = jnp.asarray(RNG.uniform(0.1, 0.5, shape), dtype)
+    d = jnp.asarray(RNG.uniform(-1, 1, shape), dtype)
+    x = ops.tridiag(a, b, c, d)
+    xr = ref.tridiag_ref(a, b, c, d)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xr), rtol=tol,
+                               atol=tol)
+    # residual vs the actual linear system
+    res = np.array(b * x)
+    res[1:] += np.asarray(a)[1:] * np.asarray(x)[:-1]
+    res[:-1] += np.asarray(c)[:-1] * np.asarray(x)[1:]
+    np.testing.assert_allclose(res, np.asarray(d), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("halo,nk,nj,ni", [(3, 8, 10, 12), (4, 4, 6, 6),
+                                           (6, 16, 8, 8)])
+def test_fvt_flux_sweep(halo, nk, nj, ni):
+    shape = (nk, nj + 2 * halo, ni + 2 * halo)
+    q = jnp.asarray(RNG.uniform(1, 2, shape), jnp.float32)
+    cx = jnp.asarray(RNG.uniform(-0.5, 0.5, shape), jnp.float32)
+    f = ops.fvt_flux(q, cx, halo=halo)
+    fr = ref.fvt_flux_ref(q, cx, halo=halo)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,KVH,D", [
+    (1, 128, 2, 2, 64), (2, 256, 4, 2, 64), (1, 256, 8, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_flash_attention_sweep(B, S, H, KVH, D, dtype, softcap):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, KVH, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, KVH, D)), dtype)
+    o = ops.flash_attention(q, k, v, softcap=softcap)
+    orf = ref.flash_attention_ref(q, k, v, softcap=softcap)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), rtol=tol,
+                               atol=tol * 5)
+
+
+@pytest.mark.parametrize("rows,d", [(128, 64), (1024, 256), (96, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = jnp.asarray(RNG.standard_normal((rows, d)), dtype)
+    w = jnp.asarray(RNG.standard_normal(d) * 0.1, jnp.float32)
+    o = ops.rmsnorm(x, w)
+    orf = ref.rmsnorm_ref(x, w)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_rmsnorm_residual():
+    x = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    r = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(128) * 0.1, jnp.float32)
+    n1, s1 = ops.rmsnorm_residual(x, r, w)
+    n2, s2 = ref.rmsnorm_residual_ref(x, r, w)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nc,B,H,N,P", [(4, 1, 8, 4, 8), (8, 2, 16, 8, 16),
+                                        (16, 1, 4, 16, 32)])
+def test_ssm_scan_sweep(nc, B, H, N, P):
+    stt = jnp.asarray(RNG.standard_normal((nc, B, H, N, P)), jnp.float32)
+    dec = jnp.asarray(RNG.uniform(0.3, 1.0, (nc, B, H)), jnp.float32)
+    s1 = ops.ssm_state_scan(stt, dec)
+    s2 = ref.ssm_state_scan_ref(stt, dec)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+# hypothesis: flash attention equals reference for random small shapes
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([64, 128]), st.sampled_from([1, 2]),
+       st.sampled_from([32, 64]))
+def test_flash_attention_property(B, S, KVH, D):
+    H = KVH * 2
+    rng = np.random.default_rng(B * S + KVH)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    orf = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5,
+                               atol=2e-5)

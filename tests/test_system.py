@@ -1,0 +1,47 @@
+"""End-to-end behaviour tests for the reproduced system."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.fv3.dyncore import FV3Config, make_step_sequential
+from repro.fv3.state import init_state as fv3_init, total_mass
+from repro.models import transformer as T
+from repro.parallel.sharding import init_params
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+
+def test_lm_end_to_end_loss_decreases():
+    """Tiny LM learns the synthetic repeat-structure: loss drops over a few
+    dozen steps — the full substrate (data → model → grads → optimizer)
+    working together."""
+    cfg = smoke_config("granite_8b")
+    params = init_params(T.model_pdefs(cfg), jax.random.PRNGKey(0))
+    state = init_state(cfg, params)
+    tcfg = TrainConfig(grad_accum=1, compute_dtype=jnp.float32,
+                       opt=OptConfig(lr=3e-3, warmup=5))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=0)
+    losses = []
+    for i in range(40):
+        state, m = step(state, make_batch(dcfg, i))
+        losses.append(float(m["loss"]))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_fv3_end_to_end_stability():
+    """Several physics steps of the mini-dycore: finite, mass-conserving."""
+    cfg = FV3Config(npx=12, nk=4, halo=6, n_split=2, k_split=2)
+    state = fv3_init(cfg)
+    m0 = total_mass(state, cfg)
+    step = make_step_sequential(cfg)
+    for _ in range(2):
+        state = step(state)
+    assert abs(total_mass(state, cfg) - m0) / m0 < 1e-5
+    for k, v in state.items():
+        assert np.isfinite(np.asarray(v)).all(), k

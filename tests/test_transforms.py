@@ -1,0 +1,190 @@
+"""Graph transformation tests: fusion preserves semantics, strength
+reduction, transfer tuning counts, perf model monotonicity — plus
+hypothesis property tests over random stencil programs."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    StencilProgram, can_otf_fuse, can_subgraph_fuse, otf_fuse,
+    program_bytes, strength_reduce_pow, strength_reduce_program,
+    subgraph_fuse, transfer_tune, tune_cutouts,
+)
+from repro.core.stencil import DomainSpec, Field, Param, gtstencil
+from repro.core.stencil.ir import BinOp, Const, FieldAccess, Pow, UnaryOp
+
+
+@gtstencil
+def avg_x(q: Field, qa: Field):
+    with computation(PARALLEL), interval(...):
+        qa = 0.5 * (q[-1, 0, 0] + q[0, 0, 0])
+
+
+@gtstencil
+def combine(qa: Field, u: Field, out: Field):
+    with computation(PARALLEL), interval(...):
+        out = qa[0, 0, 0] * u + qa[1, 0, 0]
+
+
+@gtstencil
+def decay(out: Field, r: Field):
+    with computation(PARALLEL), interval(...):
+        r = out * (out ** 2.0 + 1.0) ** 0.5
+
+
+DOM = DomainSpec(ni=8, nj=8, nk=4, halo=2)
+
+
+def build_program():
+    p = StencilProgram("demo", DOM)
+    for f in ["q", "u", "out", "r"]:
+        p.declare(f)
+    p.declare("qa", transient=True)
+    p.add(avg_x, {"q": "q", "qa": "qa"})
+    p.add(combine, {"qa": "qa", "u": "u", "out": "out"})
+    p.add(decay, {"out": "out", "r": "r"})
+    p.propagate_extents()
+    return p
+
+
+def run_interior(p, fields):
+    out = p.compile("jnp")(dict(fields))
+    h = DOM.halo
+    sl = np.s_[:, h:h + DOM.nj, h:h + DOM.ni]
+    return {k: np.asarray(v)[sl] for k, v in out.items()}
+
+
+@pytest.fixture
+def fields():
+    rng = np.random.default_rng(1)
+    return {f: jnp.asarray(rng.uniform(0.5, 1.5, DOM.padded_shape()),
+                           jnp.float32)
+            for f in ["q", "u", "out", "r", "qa"]}
+
+
+def test_otf_fusion_preserves_semantics(fields):
+    base = run_interior(build_program(), fields)
+    p = build_program()
+    st0 = p.states[0]
+    assert can_otf_fuse(st0.nodes[0], st0.nodes[1])
+    otf_fuse(p, st0, st0.nodes[0], st0.nodes[1])
+    assert len(st0.nodes) == 2  # producer removed (dead transient)
+    fused = run_interior(p, fields)
+    for k in ("out", "r"):
+        np.testing.assert_allclose(base[k], fused[k], rtol=1e-6)
+
+
+def test_otf_reduces_bytes(fields):
+    p0, p1 = build_program(), build_program()
+    otf_fuse(p1, p1.states[0], p1.states[0].nodes[0], p1.states[0].nodes[1])
+    assert program_bytes(p1) < program_bytes(p0)
+
+
+def test_sgf_fusion_preserves_semantics(fields):
+    base = run_interior(build_program(), fields)
+    p = build_program()
+    st0 = p.states[0]
+    assert can_subgraph_fuse(st0.nodes[1:3])
+    subgraph_fuse(p, st0, st0.nodes[1:3])
+    fused = run_interior(p, fields)
+    for k in ("out", "r"):
+        np.testing.assert_allclose(base[k], fused[k], rtol=1e-6)
+
+
+def test_strength_reduction_semantics_and_flops(fields):
+    p = build_program()
+    before = sum(n.stencil.flops() for n in p.all_nodes())
+    n = strength_reduce_program(p)
+    after = sum(n2.stencil.flops() for n2 in p.all_nodes())
+    assert n >= 1 and after < before
+    base = run_interior(build_program(), fields)
+    red = run_interior(p, fields)
+    np.testing.assert_allclose(base["r"], red["r"], rtol=1e-5)
+
+
+def test_strength_reduce_rewrites():
+    e = Pow(FieldAccess("x"), Const(2.0))
+    st = strength_reduce_pow(decay)
+    txt = repr(st)
+    assert "** 2.0" not in txt and "sqrt" in txt
+
+
+def test_transfer_tuning_pipeline(fields):
+    src, tgt = build_program(), build_program()
+    otf_res, sgf_res, tres = transfer_tune(src, tgt)
+    assert otf_res.n_configs >= 1
+    assert tres.n_otf + tres.n_sgf >= 1
+    base = run_interior(build_program(), fields)
+    tuned = run_interior(tgt, fields)
+    np.testing.assert_allclose(base["r"], tuned["r"], rtol=1e-6)
+
+
+def test_transfer_only_applies_on_improvement(fields):
+    tgt = build_program()
+    before = program_bytes(tgt)
+    src = build_program()
+    transfer_tune(src, tgt)
+    assert program_bytes(tgt) <= before
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random elementwise chains — fusion must preserve semantics
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def chain_program(draw):
+    """Random chain q -> t1 -> ... -> out of single-statement stencils with
+    random offsets; returns (program builder fn, n_nodes)."""
+    n = draw(st.integers(min_value=2, max_value=4))
+    offsets = [draw(st.tuples(st.integers(-1, 1), st.integers(-1, 1)))
+               for _ in range(n)]
+    coefs = [draw(st.floats(min_value=0.25, max_value=2.0)) for _ in range(n)]
+    return offsets, coefs
+
+
+@settings(max_examples=15, deadline=None)
+@given(chain_program())
+def test_fusion_random_chains(spec):
+    offsets, coefs = spec
+    n = len(offsets)
+    dom = DomainSpec(ni=6, nj=6, nk=2, halo=4)
+    from repro.core.stencil.ir import (Assign, Computation, Interval,
+                                       Stencil, Direction)
+
+    def mk(i, src, dst):
+        di, dj = offsets[i]
+        expr = BinOp("*", Const(coefs[i]),
+                     BinOp("+", FieldAccess(src, (di, dj, 0)),
+                           FieldAccess(src, (0, 0, 0))))
+        return Stencil(name=f"s{i}", computations=(
+            Computation(Direction.PARALLEL,
+                        (Assign(dst, expr, Interval()),)),),
+            fields=(src, dst), outputs=(dst,))
+
+    def build():
+        p = StencilProgram("h", dom)
+        p.declare("f0")
+        for i in range(n):
+            p.declare(f"f{i + 1}", transient=(i + 1 < n))
+        for i in range(n):
+            p.add(mk(i, f"f{i}", f"f{i + 1}"), {f"f{i}": f"f{i}",
+                                                f"f{i + 1}": f"f{i + 1}"})
+        p.propagate_extents()
+        return p
+
+    rng = np.random.default_rng(7)
+    fields = {f"f{i}": jnp.asarray(rng.uniform(0.5, 1.5, dom.padded_shape()),
+                                   jnp.float32) for i in range(n + 1)}
+    h = dom.halo
+    sl = np.s_[:, h:h + dom.nj, h:h + dom.ni]
+    base = np.asarray(build().compile("jnp")(dict(fields))[f"f{n}"])[sl]
+
+    p = build()
+    st0 = p.states[0]
+    if can_otf_fuse(st0.nodes[0], st0.nodes[1]):
+        otf_fuse(p, st0, st0.nodes[0], st0.nodes[1])
+        got = np.asarray(p.compile("jnp")(dict(fields))[f"f{n}"])[sl]
+        np.testing.assert_allclose(base, got, rtol=1e-5)
