@@ -15,14 +15,15 @@ import numpy as np
 
 from repro.core import (program_report, format_report, node_bytes,
                         node_bound_seconds, strength_reduce_pow)
-from repro.core.stencil import DomainSpec, compile_jnp
+from repro.core.backend import compile_stencil
+from repro.core.stencil import DomainSpec
 from repro.fv3 import stencils as S
 from repro.fv3.dyncore import FV3Config, build_dsw_program, default_params
 
 
 def _measure_node(program, node, params, fields):
     dom = program.node_dom(node)
-    run = compile_jnp(node.stencil, dom)
+    run = compile_stencil(node.stencil, dom, backend="jnp")
     ins = {f: fields[f] for f in node.stencil.fields}
     ps = {p: params[p] for p in node.stencil.params}
     jax.block_until_ready(run(ins, ps))
@@ -58,7 +59,7 @@ def run() -> list[str]:
                          jnp.float32) for f in ("delpc", "vort", "damp")}
 
     def t_of(st):
-        run = compile_jnp(st, sm_dom)
+        run = compile_stencil(st, sm_dom, backend="jnp")
         jax.block_until_ready(run(fs, {"dt": 0.02}))
         ts = []
         for _ in range(5):

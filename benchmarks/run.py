@@ -1,12 +1,18 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus derived key=value
-annotations).  ``python -m benchmarks.run [--only tableX]``.
+annotations).  ``python -m benchmarks.run [--only tableX] [--smoke]``.
+
+``--smoke`` is the CI fast mode: it skips the heavy measurement modules and
+instead runs the LoC accounting plus a backend round-trip check (jnp vs
+pallas-tpu interpret through ``compile_program`` on a small FVT program),
+finishing in well under a minute.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
 
@@ -20,23 +26,71 @@ MODULES = [
     ("transfer_stats", "benchmarks.transfer_stats"),
 ]
 
+SMOKE_MODULES = [
+    ("table1_loc", "benchmarks.table1_loc"),
+]
+
+
+def smoke_backend_roundtrip() -> list[str]:
+    """Fast end-to-end check of the compilation pipeline: build a small FVT
+    program and require jnp / pallas-tpu(interpret) agreement."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import available_backends, compile_program
+    from repro.core.stencil import DomainSpec
+    from repro.fv3 import stencils as S
+
+    from repro.core import StencilProgram
+
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    p = StencilProgram("smoke_fvt", dom)
+    for f in ("q", "u", "v", "qout"):
+        p.declare(f)
+    for f in ("cx", "cy"):
+        p.declare(f, transient=True)
+    p.add(S.courant_x, {"u": "u", "cx": "cx"})
+    p.add(S.courant_y, {"v": "v", "cy": "cy"})
+    p.add(S.flux_divergence, {"q": "q", "fx": "cx", "fy": "cy", "qout": "qout"})
+    p.propagate_extents()
+
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                             jnp.float32) for f in p.fields}
+    params = {"dtdx": 0.02, "dtdy": 0.02, "rdx": 1.0, "rdy": 1.0}
+    ref = compile_program(p, "jnp")(dict(fields), params)
+    out = compile_program(p, "pallas-tpu", interpret=True)(dict(fields), params)
+    err = float(np.abs(np.asarray(ref["qout"]) - np.asarray(out["qout"])).max())
+    assert err < 1e-5, f"backend mismatch: {err}"
+    return [f"smoke/backend_roundtrip,0,max_err={err:.2e};"
+            f"backends={'|'.join(available_backends())}"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: LoC table + backend round-trip only")
     args = ap.parse_args()
     failures = 0
-    for name, modpath in MODULES:
+    modules = SMOKE_MODULES if args.smoke else MODULES
+    for name, modpath in modules:
         if args.only and args.only not in name:
             continue
         try:
-            import importlib
             mod = importlib.import_module(modpath)
             for line in mod.run():
                 print(line)
         except Exception:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc()[-300:]!r}",
+                  file=sys.stderr)
+    if args.smoke and not args.only:
+        try:
+            for line in smoke_backend_roundtrip():
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"smoke/ERROR,0,{traceback.format_exc()[-300:]!r}",
                   file=sys.stderr)
     if failures:
         sys.exit(1)

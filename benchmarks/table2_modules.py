@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StencilProgram, program_bound_seconds, program_bytes
+from repro.core import (StencilProgram, compile_program,
+                        program_bound_seconds, program_bytes)
 from repro.core.stencil import DomainSpec
 from repro.fv3 import stencils as S
 from repro.fv3.dyncore import add_fvtp2d
@@ -59,7 +60,7 @@ def bench_program(p, dom, params):
     fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
                              jnp.float32)
               for f in p.fields}
-    run = jax.jit(lambda f: p.compile("jnp")(f, params))
+    run = jax.jit(lambda f: compile_program(p, "jnp")(f, params))
     out = run(fields)
     jax.block_until_ready(out)
     ts = []

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    StencilProgram, program_bound_seconds, strength_reduce_program,
-    transfer_tune, tune_cutouts, transfer,
+    StencilProgram, compile_program, program_bound_seconds,
+    strength_reduce_program, transfer_tune, tune_cutouts, transfer,
 )
 from repro.core.stencil import DomainSpec
 from repro.core.stencil.schedule import default_schedule, heuristic_schedule
@@ -49,7 +49,7 @@ def wall_clock(p, params) -> float:
     rng = np.random.default_rng(0)
     fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, p.dom.padded_shape()),
                              jnp.float32) for f in p.fields}
-    run = jax.jit(lambda f: p.compile("jnp")(f, params))
+    run = jax.jit(lambda f: compile_program(p, "jnp")(f, params))
     jax.block_until_ready(run(fields))
     ts = []
     for _ in range(3):

@@ -13,8 +13,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (
-    StencilProgram, format_report, program_bytes, program_report,
-    strength_reduce_program, transfer_tune,
+    StencilProgram, compile_program, format_report, program_bytes,
+    program_report, strength_reduce_program, transfer_tune,
 )
 from repro.core.stencil import DomainSpec, Field, Param, gtstencil
 
@@ -69,13 +69,17 @@ def main():
     fields = {f: jnp.asarray(rng.uniform(0.5, 1.5, dom.padded_shape()),
                              jnp.float32) for f in p.fields}
     params = {"dt": 0.1, "c": 0.2}
-    out_jnp = p.compile("jnp")(dict(fields), params)
-    out_pl = p.compile("pallas", interpret=True)(dict(fields), params)
+    # one entry point, three registered backends (jnp oracle, pallas-tpu,
+    # pallas-gpu) — the hardware-parameterized compilation pipeline
+    out_jnp = compile_program(p, "jnp")(dict(fields), params)
+    out_pl = compile_program(p, "pallas-tpu", interpret=True)(dict(fields), params)
     err = np.abs(np.asarray(out_jnp["out"]) - np.asarray(out_pl["out"])).max()
-    print(f"\njnp vs pallas(interpret) max err: {err:.2e}")
+    print(f"\njnp vs pallas-tpu(interpret) max err: {err:.2e}")
 
     print("\nmemory-bound model report (TPU v5e target):")
     print(format_report(program_report(p)))
+    print("\nsame program, P100 GPU target:")
+    print(format_report(program_report(p, hw="p100")))
 
 
 if __name__ == "__main__":

@@ -1,13 +1,32 @@
 # The paper's primary contribution: a declarative stencil DSL with
 # data-centric optimization, transfer tuning and model-driven performance
 # engineering, adapted from GPU/DaCe to TPU/JAX+Pallas.
+from .hardware import (  # noqa: F401
+    Hardware,
+    P100,
+    TPU_V4,
+    TPU_V5E,
+    V100,
+    available_hardware,
+    get_hardware,
+    register_hardware,
+    resolve_hardware,
+)
 from .graph import FieldDecl, Node, State, StencilProgram, rename_stencil  # noqa: F401
+from .backend import (  # noqa: F401
+    Backend,
+    TuningCache,
+    available_backends,
+    compile_program,
+    compile_stencil,
+    default_cache,
+    get_backend,
+    register_backend,
+    set_default_cache,
+)
 from .orchestration import Monitor, bind_constants, orchestrate  # noqa: F401
 from .perfmodel import (  # noqa: F401
-    Hardware,
     KernelReport,
-    P100,
-    TPU_V5E,
     format_report,
     node_bound_seconds,
     node_bytes,

@@ -1,9 +1,15 @@
 """Local stencil autotuning (paper §VI-A: 'initial heuristics').
 
-Searches the feasible schedule space of one stencil.  The objective is
-pluggable: the analytical memory-bound model by default (this container has
-no TPU), optionally combined with wall-clock measurement of the compiled
-callable — the same interface the paper's tuner uses on Piz Daint.
+Searches the feasible schedule space of one stencil under a hardware
+descriptor (TPU lane/VMEM rules or GPU warp/shared-memory rules — see
+:mod:`repro.core.stencil.schedule`).  The objective is pluggable: the
+analytical memory-bound model by default (this container has no TPU),
+optionally combined with wall-clock measurement of the compiled callable —
+the same interface the paper's tuner uses on Piz Daint.
+
+Model-driven searches are memoized in the persistent tuning cache keyed by
+(stencil fingerprint, domain, backend, hardware), so re-tuning the same
+stencil across runs is a disk read, not a search.
 """
 
 from __future__ import annotations
@@ -13,18 +19,16 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from .hardware import Hardware, resolve_hardware
+from .stencil.domain import DomainSpec
 from .stencil.ir import Stencil
-from .stencil.lowering_jnp import DomainSpec
-from .stencil.lowering_pallas import compile_pallas
-from .stencil.schedule import Schedule, feasible_schedules, vmem_footprint
-from .perfmodel import Hardware, TPU_V5E
+from .stencil.schedule import Schedule, vmem_footprint
 
 
 def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
-               hw: Hardware = TPU_V5E, dtype_bytes: int = 4) -> float:
+               hw: Hardware | str | None = None, dtype_bytes: int = 4) -> float:
     """Analytical cost of one stencil launch under a schedule.
 
     bytes/bw plus structural penalties:
@@ -35,6 +39,7 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
       * 'split' region kernels add a launch overhead per region but shrink
         the predicated volume.
     """
+    hw = resolve_hardware(hw)
     nk, nj, ni = dom.nk, dom.nj, dom.ni
     vol = nk * (nj + 2 * dom.extend[1]) * (ni + 2 * dom.extend[0])
     n_fields = len(stencil.fields)
@@ -52,8 +57,14 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
     else:
         bk = sched.block_k or nk
         n_blocks = max(1, nk // bk)
+        if hw.kind == "gpu":
+            # thread-block grid: blocks along all three tile dims
+            bi = sched.block_i or ni
+            bj = sched.block_j or nj
+            n_blocks *= max(1, ni // bi) * max(1, nj // bj)
         t += launch_overhead * (1 + 0.05 * (n_blocks - 1))
-        if vmem_footprint(stencil, sched, (nk, nj, ni), dtype_bytes) > hw.vmem_bytes:
+        if vmem_footprint(stencil, sched, (nk, nj, ni),
+                          dtype_bytes) > hw.vmem_bytes:
             return float("inf")
     has_regions = any(s.region is not None
                       for c in stencil.computations for s in c.statements)
@@ -87,15 +98,43 @@ class TuneResult:
     schedule: Schedule
     cost: float
     n_evaluated: int
+    from_cache: bool = False
 
 
 def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
-                 hw: Hardware = TPU_V5E,
+                 hw: Hardware | str | None = None,
+                 backend: str = "pallas-tpu",
                  measure: Callable[[Schedule], float] | None = None,
-                 top_m: int = 1) -> list[TuneResult]:
-    """Exhaustive search over feasible schedules; returns top-M by cost."""
+                 top_m: int = 1,
+                 cache=None) -> list[TuneResult]:
+    """Exhaustive search over feasible schedules; returns top-M by cost.
+
+    The schedule space is the ``backend``'s (a registered backend may
+    override ``feasible_schedules`` with target-specific rules) under the
+    tiling constraints of ``hw``.  Pure model-driven searches (no
+    ``measure``) hit the persistent tuning cache: the second identical
+    call — even in a fresh process — skips the search.  Wall-clock
+    objectives are machine-state-dependent and are never cached.
+    """
+    from .backend import get_backend
+    from .backend.cache import COST_MODEL_VERSION, default_cache, make_key
+
+    be = get_backend(backend)
+    hw = resolve_hardware(hw)
+    use_cache = None if measure is not None else (
+        cache if cache is not None else default_cache())
+    key = None
+    if use_cache is not None:
+        key = make_key("tune_stencil", COST_MODEL_VERSION, stencil, dom,
+                       be.name, hw.name, top_m)
+        hit = use_cache.get(key)
+        if hit is not None:
+            return [TuneResult(Schedule.from_dict(r["schedule"]), r["cost"],
+                               r["n_evaluated"], from_cache=True)
+                    for r in hit]
     results = []
-    for sched in feasible_schedules(stencil, (dom.nk, dom.nj, dom.ni)):
+    for sched in be.feasible_schedules(stencil, (dom.nk, dom.nj, dom.ni),
+                                       hardware=hw):
         c = model_cost(stencil, sched, dom, hw)
         if measure is not None and c != float("inf"):
             c = measure(sched)
@@ -105,4 +144,7 @@ def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
     out = results[:top_m]
     for r in out:
         r.n_evaluated = n
+    if use_cache is not None:
+        use_cache.put(key, [{"schedule": r.schedule.to_dict(), "cost": r.cost,
+                             "n_evaluated": r.n_evaluated} for r in out])
     return out

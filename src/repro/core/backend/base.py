@@ -1,0 +1,107 @@
+"""Backend protocol + registry.
+
+A :class:`Backend` owns one lowering of the stencil IR and the
+hardware-default choices that go with it.  Backends register by name;
+everything above this layer (graph compilation, autotuning, the FV3 dycore,
+benchmarks) resolves backends through :func:`get_backend` and never imports
+a lowering module directly — the pluggable-backend architecture of Devito
+and DaCe that the paper's portability claim rests on.
+
+Adding a backend:
+
+    class MyBackend(Backend):
+        name = "my-target"
+        default_hardware = "tpu-v5e"
+        def compile_stencil(self, stencil, dom, *, schedule=None,
+                            hardware=None, interpret=True, dtype=...):
+            return <callable fn(fields, params) -> dict>
+
+    register_backend(MyBackend())
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Iterator, Mapping
+
+from ..hardware import Hardware, resolve_hardware
+from ..stencil.domain import DomainSpec
+from ..stencil.ir import Stencil
+from ..stencil.schedule import (
+    Schedule,
+    default_schedule,
+    feasible_schedules,
+    heuristic_schedule,
+)
+
+Runner = Callable[[Mapping[str, Any], Mapping[str, Any] | None], dict]
+
+
+class Backend(abc.ABC):
+    """One lowering target of the stencil IR."""
+
+    #: registry key, e.g. "jnp" / "pallas-tpu" / "pallas-gpu"
+    name: str = ""
+    #: name of the hardware descriptor assumed when the caller passes none
+    default_hardware: str = "tpu-v5e"
+
+    def resolve_hw(self, hardware: Hardware | str | None) -> Hardware:
+        return resolve_hardware(hardware, default=self.default_hardware)
+
+    @abc.abstractmethod
+    def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
+                        schedule: Schedule | None = None,
+                        hardware: Hardware | str | None = None,
+                        interpret: bool = True, dtype=None) -> Runner:
+        """Lower one stencil into ``fn(fields, params) -> dict``."""
+
+    # -- schedule policy (hardware-parameterized, overridable) ---------------
+    def feasible_schedules(self, stencil: Stencil, dom_shape,
+                           dtype_bytes: int = 4,
+                           hardware: Hardware | str | None = None,
+                           ) -> Iterator[Schedule]:
+        return feasible_schedules(stencil, dom_shape, dtype_bytes,
+                                  hw=self.resolve_hw(hardware))
+
+    def default_schedule(self, stencil: Stencil, dom_shape,
+                         hardware: Hardware | str | None = None) -> Schedule:
+        return default_schedule(stencil, dom_shape,
+                                hw=self.resolve_hw(hardware))
+
+    def heuristic_schedule(self, stencil: Stencil, dom_shape,
+                           hardware: Hardware | str | None = None) -> Schedule:
+        return heuristic_schedule(stencil, dom_shape,
+                                  hw=self.resolve_hw(hardware))
+
+    def __repr__(self):
+        return f"<backend {self.name!r} (default hw {self.default_hardware})>"
+
+
+_REGISTRY: dict[str, Backend] = {}
+#: historical spellings accepted by ``StencilProgram.compile``
+_ALIASES = {"pallas": "pallas-tpu"}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    if not backend.name:
+        raise ValueError("backend must define a non-empty .name")
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: "str | Backend") -> Backend:
+    if isinstance(name, Backend):
+        return name
+    key = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {known}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,136 @@
+"""``compile_program`` — the single entry point of the compilation pipeline.
+
+frontend → IR → graph → **backend** → schedule/tuning: every consumer
+(`StencilProgram.compile`, `orchestrate`, the FV3 dycore, examples,
+benchmarks) funnels through here; no module outside this package touches a
+lowering directly.
+
+Per-node compiled runners are memoized in-process keyed by
+(stencil fingerprint, schedule, backend, hardware, domain, interpret):
+benchmark harnesses and tuning loops compile the same program repeatedly,
+and re-lowering every node each time is pure waste.  Stats are observable
+via :func:`compile_cache_stats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from ..hardware import Hardware
+from ..stencil.schedule import Schedule
+from .base import Backend, get_backend
+from .cache import CacheStats, stencil_fingerprint
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a circular import
+    from ..graph import Node, StencilProgram
+
+_runner_memo: dict[tuple, Callable] = {}
+_runner_stats = CacheStats()
+
+
+def compile_cache_stats() -> dict:
+    """In-process per-node compilation memo counters."""
+    return _runner_stats.as_dict()
+
+
+def clear_compile_cache() -> None:
+    _runner_memo.clear()
+
+
+def compile_stencil(stencil, dom, *, backend: "str | Backend" = "jnp",
+                    schedule: Schedule | None = None,
+                    hardware: Hardware | str | None = None,
+                    interpret: bool = True, dtype=None,
+                    memoize: bool = True) -> Callable:
+    """Compile one stencil through a registered backend (memoized)."""
+    be = get_backend(backend)
+    hw = be.resolve_hw(hardware)
+    if not memoize:
+        return be.compile_stencil(stencil, dom, schedule=schedule,
+                                  hardware=hw, interpret=interpret,
+                                  dtype=dtype)
+    key = (stencil_fingerprint(stencil), dom,
+           None if schedule is None else dataclasses.astuple(schedule),
+           be.name, hw.name, interpret, None if dtype is None else str(dtype))
+    runner = _runner_memo.get(key)
+    if runner is None:
+        _runner_stats.misses += 1
+        runner = be.compile_stencil(stencil, dom, schedule=schedule,
+                                    hardware=hw, interpret=interpret,
+                                    dtype=dtype)
+        _runner_memo[key] = runner
+    else:
+        _runner_stats.hits += 1
+    return runner
+
+
+def _resolve_override(node: "Node", overrides) -> Schedule | None:
+    if not overrides:
+        return node.schedule
+    # per-instance label wins over per-motif base name
+    if node.label in overrides:
+        return overrides[node.label]
+    if node.base_name in overrides:
+        return overrides[node.base_name]
+    return node.schedule
+
+
+def compile_program(program: "StencilProgram",
+                    backend: "str | Backend" = "jnp", *,
+                    hardware: Hardware | str | None = None,
+                    schedule_overrides: Mapping[str, Schedule] | None = None,
+                    interpret: bool = True,
+                    donate: bool = False) -> Callable:
+    """Compile a whole :class:`StencilProgram` into one functional callable
+    ``fn(fields: dict, params: dict) -> dict`` (all fields threaded).
+
+    ``backend`` is a registry name (``"jnp"``, ``"pallas-tpu"``,
+    ``"pallas-gpu"``) or a :class:`Backend` instance; ``hardware`` a
+    descriptor or registered name (defaults to the backend's);
+    ``schedule_overrides`` maps node labels (``"al_x#3"``) or motif base
+    names (``"al_x"``) to :class:`Schedule` objects, overriding any
+    schedule stored on the node.
+    """
+    be = get_backend(backend)
+    hw = be.resolve_hw(hardware)
+    runners = []
+    for s in program.states:
+        for n in s.nodes:
+            dom = program.node_dom(n)
+            sched = _resolve_override(n, schedule_overrides)
+            r = compile_stencil(n.stencil, dom, backend=be, schedule=sched,
+                                hardware=hw, interpret=interpret)
+            runners.append((n, r))
+
+    fields_decl = program.fields
+    dom_shape = program.dom.padded_shape()
+
+    def run(fields: dict, params: dict | None = None) -> dict:
+        params = dict(params or {})
+        env = dict(fields)
+        template = next((v for v in fields.values()
+                         if hasattr(v, "dtype")), None)
+        for name, decl in fields_decl.items():
+            if name not in env:
+                # auto-allocated (typically transient) containers — the
+                # backend owns allocation, never the user (paper §IV-A).
+                # A varying-zero from an input keeps shard_map's manual-
+                # axes (VMA) tracking consistent inside scan carries.
+                z = jnp.zeros(dom_shape, decl.dtype)
+                if template is not None:
+                    z = z + (template.ravel()[0] * 0).astype(decl.dtype)
+                env[name] = z
+        for n, r in runners:
+            ins = {f: env[f] for f in n.stencil.fields}
+            ps = {p: params[p] for p in n.stencil.params}
+            out = r(ins, ps)
+            env.update(out)
+        return env
+
+    if donate:
+        return jax.jit(run, donate_argnums=(0,))
+    return run

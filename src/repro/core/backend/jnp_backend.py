@@ -1,0 +1,31 @@
+"""The ``"jnp"`` reference backend — pure-jnp oracle lowering.
+
+Schedules are accepted and ignored: XLA owns all mapping decisions.  This is
+the debuggable ground truth every other backend validates against (the
+paper's sequential/debug backend role).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..hardware import Hardware
+from ..stencil.domain import DomainSpec
+from ..stencil.ir import Stencil
+from ..stencil.schedule import Schedule
+from .base import Backend, Runner, register_backend
+from .lowering_jnp import compile_jnp
+
+
+class JnpBackend(Backend):
+    name = "jnp"
+    default_hardware = "tpu-v5e"
+
+    def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
+                        schedule: Schedule | None = None,
+                        hardware: Hardware | str | None = None,
+                        interpret: bool = True, dtype=None) -> Runner:
+        return compile_jnp(stencil, dom, dtype=dtype or jnp.float32)
+
+
+register_backend(JnpBackend())

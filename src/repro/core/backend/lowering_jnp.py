@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ir import (
+from ..stencil.domain import DomainSpec
+from ..stencil.ir import (
     Assign,
     BinOp,
     Computation,
@@ -60,27 +61,6 @@ _BIN = {
     "==": lambda a, b: a == b,
     "!=": lambda a, b: a != b,
 }
-
-
-@dataclasses.dataclass(frozen=True)
-class DomainSpec:
-    """Compute-domain description shared by all backends."""
-
-    ni: int
-    nj: int
-    nk: int
-    halo: int
-    extend: tuple[int, int] = (0, 0)  # extra (i, j) cells computed each side
-
-    @property
-    def write_window(self):
-        ei, ej = self.extend
-        h = self.halo
-        return (slice(None), slice(h - ej, h + self.nj + ej),
-                slice(h - ei, h + self.ni + ei))
-
-    def padded_shape(self):
-        return (self.nk, self.nj + 2 * self.halo, self.ni + 2 * self.halo)
 
 
 def _read(arr: jnp.ndarray, off, dom: DomainSpec, k_slice):

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ir import (
+from ..stencil.domain import DomainSpec
+from ..stencil.ir import (
     Assign,
     BinOp,
     Computation,
@@ -48,8 +49,7 @@ from .ir import (
     UnaryOp,
     Where,
 )
-from .lowering_jnp import DomainSpec
-from .schedule import Schedule, default_schedule
+from ..stencil.schedule import Schedule, default_schedule
 
 _UNARY = {
     "neg": lambda x: -x,

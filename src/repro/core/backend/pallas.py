@@ -1,0 +1,52 @@
+"""Pallas backends: ``"pallas-tpu"`` and ``"pallas-gpu"``.
+
+Both lower through the same ``pl.pallas_call`` kernel generator
+(``lowering_pallas``); on a real accelerator the call lowers to Mosaic (TPU)
+or Triton (GPU), while ``interpret=True`` executes on CPU for validation.
+What distinguishes the two backends is the *schedule policy*: each resolves
+feasibility, defaults and heuristics against its own hardware descriptor
+(TPU lane/sublane/VMEM rules vs GPU warp/shared-memory rules), so the same
+``StencilProgram`` tunes correctly for a v5e or a P100-class part.
+"""
+
+from __future__ import annotations
+
+from ..hardware import Hardware
+from ..stencil.domain import DomainSpec
+from ..stencil.ir import Stencil
+from ..stencil.schedule import Schedule
+from .base import Backend, Runner, register_backend
+from .lowering_pallas import compile_pallas
+
+
+class PallasTPUBackend(Backend):
+    name = "pallas-tpu"
+    default_hardware = "tpu-v5e"
+
+    def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
+                        schedule: Schedule | None = None,
+                        hardware: Hardware | str | None = None,
+                        interpret: bool = True, dtype=None) -> Runner:
+        if schedule is None:
+            schedule = self.default_schedule(
+                stencil, (dom.nk, dom.nj, dom.ni), hardware)
+        kwargs = {} if dtype is None else {"dtype": dtype}
+        return compile_pallas(stencil, dom, schedule=schedule,
+                              interpret=interpret, **kwargs)
+
+
+class PallasGPUBackend(PallasTPUBackend):
+    """GPU variant: same kernel generator, GPU schedule rules + defaults.
+
+    The K-slab grid maps naturally to a thread-block z-dimension and the
+    in-kernel ``fori_loop`` of vertical solvers to a per-thread sequential
+    loop, so the lowering is shared; block_i/block_j from the GPU-feasible
+    schedules feed the cost model and (on real GPUs) the Triton tile picker.
+    """
+
+    name = "pallas-gpu"
+    default_hardware = "p100"
+
+
+register_backend(PallasTPUBackend())
+register_backend(PallasGPUBackend())

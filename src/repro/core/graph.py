@@ -15,12 +15,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping
 
-import jax
 import jax.numpy as jnp
 
+from .stencil.domain import DomainSpec
 from .stencil.ir import Assign, Computation, Expr, FieldAccess, ParamRef, Stencil
-from .stencil.lowering_jnp import DomainSpec, compile_jnp
-from .stencil.lowering_pallas import compile_pallas
 from .stencil.schedule import Schedule
 
 
@@ -190,47 +188,21 @@ class StencilProgram:
                     "a halo exchange is required before this node")
 
     # -- execution ---------------------------------------------------------------
-    def compile(self, backend: str = "jnp", *, interpret: bool = True,
+    def compile(self, backend: str = "jnp", *, hardware=None,
+                schedule_overrides=None, interpret: bool = True,
                 donate: bool = False) -> Callable:
         """Compile the whole program into one functional callable
-        ``fn(fields: dict, params: dict) -> dict`` (all fields threaded)."""
-        runners = []
-        for s in self.states:
-            for n in s.nodes:
-                dom = self.node_dom(n)
-                if backend == "jnp":
-                    r = compile_jnp(n.stencil, dom)
-                elif backend == "pallas":
-                    r = compile_pallas(n.stencil, dom, schedule=n.schedule,
-                                       interpret=interpret)
-                else:
-                    raise ValueError(backend)
-                runners.append((n, r))
+        ``fn(fields: dict, params: dict) -> dict`` (all fields threaded).
 
-        def run(fields: dict, params: dict | None = None) -> dict:
-            params = dict(params or {})
-            env = dict(fields)
-            shape = self.dom.padded_shape()
-            template = next((v for v in fields.values()
-                             if hasattr(v, "dtype")), None)
-            for name, decl in self.fields.items():
-                if name not in env:
-                    # auto-allocated (typically transient) containers — the
-                    # backend owns allocation, never the user (paper §IV-A).
-                    # A varying-zero from an input keeps shard_map's manual-
-                    # axes (VMA) tracking consistent inside scan carries.
-                    z = jnp.zeros(shape, decl.dtype)
-                    if template is not None:
-                        z = z + (template.ravel()[0] * 0).astype(decl.dtype)
-                    env[name] = z
-            for n, r in runners:
-                ins = {f: env[f] for f in n.stencil.fields}
-                ps = {p: params[p] for p in n.stencil.params}
-                out = r(ins, ps)
-                env.update(out)
-            return env
+        Thin wrapper over :func:`repro.core.backend.compile_program`; the
+        backend registry resolves ``backend``/``hardware`` names (the legacy
+        ``"pallas"`` spelling aliases to ``"pallas-tpu"``).
+        """
+        from .backend import compile_program
 
-        return run
+        return compile_program(self, backend, hardware=hardware,
+                               schedule_overrides=schedule_overrides,
+                               interpret=interpret, donate=donate)
 
     def __repr__(self):
         lines = [f"program {self.name}: {len(self.all_nodes())} nodes, "

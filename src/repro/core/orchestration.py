@@ -53,13 +53,15 @@ def bind_constants(fn: Callable, **consts) -> Callable:
     return functools.partial(fn, **consts)
 
 
-def orchestrate(program_or_fn, *, backend: str = "jnp", donate: bool = True,
-                interpret: bool = True) -> Callable:
+def orchestrate(program_or_fn, *, backend: str = "jnp", hardware=None,
+                donate: bool = True, interpret: bool = True) -> Callable:
     """Compile a StencilProgram (or plain function) into one jitted step."""
+    from .backend import compile_program
     from .graph import StencilProgram
 
     if isinstance(program_or_fn, StencilProgram):
-        fn = program_or_fn.compile(backend=backend, interpret=interpret)
+        fn = compile_program(program_or_fn, backend, hardware=hardware,
+                             interpret=interpret)
     else:
         fn = program_or_fn
     if donate:

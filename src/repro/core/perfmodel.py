@@ -5,8 +5,10 @@ were memory-bandwidth bound*, counting every element of every accessed field
 exactly once (deliberately ignoring caches), then rank kernels by aggregate
 runtime and report utilization vs the bound.
 
-Hardware constants target TPU v5e (the brief's roofline numbers); the paper's
-P100 values are kept for the faithful-comparison benchmark.
+Hardware descriptors live in :mod:`repro.core.hardware` (TPU v5e is the
+default target, the paper's P100 kept for the faithful comparison); every
+bound below takes the descriptor — or a registered hardware name — so the
+same model prices a program for any registered part.
 """
 
 from __future__ import annotations
@@ -15,21 +17,9 @@ import dataclasses
 from typing import Callable
 
 from .graph import Node, StencilProgram
+from .hardware import Hardware, P100, TPU_V5E, resolve_hardware  # noqa: F401
 
 BYTES = {"float32": 4, "float64": 8, "bfloat16": 2, "float16": 2}
-
-
-@dataclasses.dataclass(frozen=True)
-class Hardware:
-    name: str
-    peak_flops: float      # FLOP/s
-    hbm_bw: float          # B/s
-    link_bw: float         # B/s per ICI link (0 if n/a)
-    vmem_bytes: int = 16 * 1024 * 1024
-
-
-TPU_V5E = Hardware("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
-P100 = Hardware("p100", peak_flops=4.7e12, hbm_bw=501.1e9, link_bw=0)  # paper §VIII-A
 
 
 def _dtype_bytes(dtype) -> int:
@@ -60,8 +50,9 @@ def node_flops(program: StencilProgram, node: Node) -> int:
 
 
 def node_bound_seconds(program: StencilProgram, node: Node,
-                       hw: Hardware = TPU_V5E) -> float:
+                       hw: Hardware | str | None = None) -> float:
     """max(memory term, compute term) — the kernel cannot run faster."""
+    hw = resolve_hardware(hw)
     return max(node_bytes(program, node) / hw.hbm_bw,
                node_flops(program, node) / hw.peak_flops)
 
@@ -70,7 +61,9 @@ def program_bytes(program: StencilProgram) -> int:
     return sum(node_bytes(program, n) for n in program.all_nodes())
 
 
-def program_bound_seconds(program: StencilProgram, hw: Hardware = TPU_V5E) -> float:
+def program_bound_seconds(program: StencilProgram,
+                          hw: Hardware | str | None = None) -> float:
+    hw = resolve_hardware(hw)
     return sum(node_bound_seconds(program, n, hw) for n in program.all_nodes())
 
 
@@ -89,11 +82,13 @@ class KernelReport:
         return self.bound_s / self.measured_s
 
 
-def program_report(program: StencilProgram, hw: Hardware = TPU_V5E,
+def program_report(program: StencilProgram,
+                   hw: Hardware | str | None = None,
                    measure: Callable[[Node], float] | None = None,
                    ) -> list[KernelReport]:
     """Per-kernel bounds, ranked worst-utilization-first when measured —
     the paper's Fig. 10 'model-augmented kernel runtimes'."""
+    hw = resolve_hardware(hw)
     out = []
     for n in program.all_nodes():
         r = KernelReport(

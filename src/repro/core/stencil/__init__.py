@@ -21,9 +21,8 @@ from .ir import (  # noqa: F401
     UnaryOp,
     Where,
 )
+from .domain import DomainSpec  # noqa: F401
 from .frontend import Field, Param, gtstencil  # noqa: F401
-from .lowering_jnp import DomainSpec, compile_jnp  # noqa: F401
-from .lowering_pallas import compile_pallas  # noqa: F401
 from .schedule import (  # noqa: F401
     Schedule,
     default_schedule,

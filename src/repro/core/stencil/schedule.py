@@ -9,23 +9,24 @@ enumerates for its ``StencilComputation`` library nodes:
  * local-storage kind for loop carries (re-read VMEM vs VREG carry),
  * horizontal-region strategy (predicated full-domain map vs split kernels).
 
-Validity rules (the paper generates "a list of feasible options"): vertical
-solvers cannot map K to the grid; blocks must fit VMEM; lane dim should be a
-multiple of 128 and sublane of 8 for f32 (TPU tiling).
+Validity rules (the paper generates "a list of feasible options") are
+*hardware-parameterized*: every enumeration takes a
+:class:`~repro.core.hardware.Hardware` descriptor instead of reading
+module-level TPU constants.  On TPU, vertical solvers cannot map K to the
+grid; blocks must fit VMEM; the lane dim should be a multiple of 128 and the
+sublane of 8 for f32.  On GPU the block is a thread-block tile: the
+unit-stride extent aligns to the warp width and the per-block working set
+must fit shared memory, which favors small IJ tiles with K as grid or loop.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
 from typing import Iterator
 
+from ..hardware import Hardware, resolve_hardware
 from .ir import Stencil
-
-VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
-LANE = 128
-SUBLANE = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,9 +49,21 @@ class Schedule:
                 f"bk={self.block_k or 'full'},kgrid={self.k_as_grid},"
                 f"carry={self.carry_storage},region={self.region_strategy}")
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (persistent tuning-cache payload)."""
+        return dataclasses.asdict(self)
 
-def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape, dtype_bytes=4) -> int:
-    """Bytes of VMEM one kernel invocation touches under this schedule."""
+    @classmethod
+    def from_dict(cls, d: dict) -> "Schedule":
+        return cls(**d)
+
+
+def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
+                   dtype_bytes: int = 4) -> int:
+    """Bytes of fast on-chip memory one kernel invocation touches under this
+    schedule (VMEM block on TPU; shared-memory tile on GPU).  The byte
+    count itself is hardware-independent; callers compare it against
+    ``hw.vmem_bytes``."""
     nk, nj, ni = dom_shape
     bi = sched.block_i or ni
     bj = sched.block_j or nj
@@ -59,25 +72,24 @@ def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape, dtype_bytes=4) 
     return n_bufs * bi * bj * bk * dtype_bytes
 
 
-def feasible_schedules(stencil: Stencil, dom_shape,
-                       dtype_bytes=4) -> Iterator[Schedule]:
-    """Enumerate valid schedules for a stencil on a local domain (paper §V-A:
-    'for each node we generate a list of feasible options')."""
+def _feasible_tpu(stencil: Stencil, dom_shape, dtype_bytes: int,
+                  hw: Hardware) -> Iterator[Schedule]:
     nk, nj, ni = dom_shape
     vertical = stencil.is_vertical_solver()
     has_regions = any(s.region is not None
                       for c in stencil.computations for s in c.statements)
+    lane, sublane = hw.lane, hw.sublane
     k_opts = [1, 4, 8, 16, 0] if not vertical else [0]
-    i_opts = [0] if ni <= 2 * LANE else [0, LANE, 2 * LANE]
-    j_opts = [0, SUBLANE, 4 * SUBLANE, 16 * SUBLANE]
+    i_opts = [0] if ni <= 2 * lane else [0, lane, 2 * lane]
+    j_opts = [0, sublane, 4 * sublane, 16 * sublane]
     region_opts = ["predicated", "split"] if has_regions else ["predicated"]
     carry_opts = ["vreg", "vmem"] if vertical else ["vreg"]
     for bi, bj, bk, reg, carry in itertools.product(
-            i_opts, j_opts, k_opts, region_opts, carry_opts):
+            i_opts, j_opts, bk_dedup(k_opts, nk), region_opts, carry_opts):
         s = Schedule(block_i=bi, block_j=bj, block_k=bk,
                      k_as_grid=not vertical, carry_storage=carry,
                      region_strategy=reg)
-        if vmem_footprint(stencil, s, dom_shape, dtype_bytes) > VMEM_BYTES:
+        if vmem_footprint(stencil, s, dom_shape, dtype_bytes) > hw.vmem_bytes:
             continue
         # stencils with k offsets need whole-K blocks (no overlapping blocks
         # across the K grid on TPU)
@@ -86,30 +98,123 @@ def feasible_schedules(stencil: Stencil, dom_shape,
         yield s
 
 
-def default_schedule(stencil: Stencil, dom_shape, dtype_bytes=4) -> Schedule:
-    """The backend's default before any tuning (paper's 'Default' row in
-    Table III): whole-domain blocks, VMEM re-reads, predicated regions."""
+def _feasible_gpu(stencil: Stencil, dom_shape, dtype_bytes: int,
+                  hw: Hardware) -> Iterator[Schedule]:
+    """GPU tiling rules: thread-block tiles whose unit-stride extent is a
+    warp multiple and whose working set fits shared memory.  Full-domain
+    blocks are allowed only when they fit (they essentially never do), so
+    the enumeration is dominated by small IJ tiles — the paper's DaCe/GPU
+    maps — with K either a grid dimension or an in-kernel loop."""
+    nk, nj, ni = dom_shape
     vertical = stencil.is_vertical_solver()
-    return Schedule(block_i=0, block_j=0,
-                    block_k=0 if (vertical or stencil.has_k_offsets()) else 0,
+    has_regions = any(s.region is not None
+                      for c in stencil.computations for s in c.statements)
+    warp = hw.lane
+    i_opts = [w for w in (warp, 2 * warp, 4 * warp) if w <= ni] or [ni]
+    j_opts = [1, 2, 4, 8]
+    # K-offset stencils need whole-K blocks (same rule as TPU); otherwise
+    # small K slabs map to the thread-block z dimension
+    if vertical or stencil.has_k_offsets():
+        k_opts = [0]
+    else:
+        k_opts = bk_dedup([1, 2, 4], nk)
+    region_opts = ["predicated", "split"] if has_regions else ["predicated"]
+    # GPU vertical carries live in registers; the "vmem" variant models
+    # spilling the carry to local/shared memory for A/B comparison.
+    carry_opts = ["vreg", "vmem"] if vertical else ["vreg"]
+    for bi, bj, bk, reg, carry in itertools.product(
+            i_opts, j_opts, k_opts, region_opts, carry_opts):
+        s = Schedule(block_i=bi, block_j=bj, block_k=bk,
+                     k_as_grid=not vertical, carry_storage=carry,
+                     region_strategy=reg)
+        if vmem_footprint(stencil, s, dom_shape, dtype_bytes) > hw.vmem_bytes:
+            continue
+        yield s
+
+
+def bk_dedup(k_opts: list[int], nk: int) -> list[int]:
+    """Drop K-block sizes ≥ nk (equivalent to whole-extent 0)."""
+    out = []
+    for bk in k_opts:
+        v = bk if bk < nk else 0
+        if v not in out:
+            out.append(v)
+    return out
+
+
+def feasible_schedules(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
+                       hw: Hardware | str | None = None) -> Iterator[Schedule]:
+    """Enumerate valid schedules for a stencil on a local domain (paper §V-A:
+    'for each node we generate a list of feasible options'), under the
+    tiling rules of ``hw`` (TPU lane/sublane/VMEM vs GPU warp/smem)."""
+    hw = resolve_hardware(hw)
+    if hw.kind == "gpu":
+        yield from _feasible_gpu(stencil, dom_shape, dtype_bytes, hw)
+    else:
+        yield from _feasible_tpu(stencil, dom_shape, dtype_bytes, hw)
+
+
+def default_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
+                     hw: Hardware | str | None = None) -> Schedule:
+    """The backend's default before any tuning (paper's 'Default' row in
+    Table III): untransformed storage choices (memory-backed carries,
+    predicated regions) on the largest tile the hardware's feasibility
+    rules allow — whole-domain blocks on TPU, a warp-aligned tile that
+    fits shared memory on GPU (whole-domain blocks are never GPU-feasible,
+    so defaulting to them would contradict ``feasible_schedules``)."""
+    hw = resolve_hardware(hw)
+    vertical = stencil.is_vertical_solver()
+    if hw.kind == "gpu":
+        nk, nj, ni = dom_shape
+        bi = min(ni, 4 * hw.lane)
+        bj = 8
+        while (vmem_footprint(stencil,
+                              Schedule(block_i=bi, block_j=bj,
+                                       block_k=0 if vertical else 1,
+                                       k_as_grid=not vertical),
+                              dom_shape, dtype_bytes) > hw.vmem_bytes
+               and bj > 1):
+            bj //= 2
+        return Schedule(block_i=bi, block_j=bj,
+                        block_k=0 if vertical else 1,
+                        k_as_grid=not vertical,
+                        carry_storage="vmem", region_strategy="predicated")
+    return Schedule(block_i=0, block_j=0, block_k=0,
                     k_as_grid=not vertical,
                     carry_storage="vmem", region_strategy="predicated")
 
 
-def heuristic_schedule(stencil: Stencil, dom_shape, dtype_bytes=4) -> Schedule:
-    """Initial heuristics (paper §VI-A): smallest VMEM-fitting K slab for
-    horizontal stencils (maximizes grid parallelism while keeping full IJ for
-    halo reuse); full-column blocks with VREG carries for vertical solvers."""
+def heuristic_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
+                       hw: Hardware | str | None = None) -> Schedule:
+    """Initial heuristics (paper §VI-A), per hardware kind.
+
+    TPU: smallest VMEM-fitting K slab for horizontal stencils (maximizes
+    grid parallelism while keeping full IJ for halo reuse); full-column
+    blocks with VREG carries for vertical solvers.
+
+    GPU: a warp-aligned IJ thread-block tile with a one-level K slab —
+    occupancy over reuse, the classic CUDA stencil starting point.
+    """
+    hw = resolve_hardware(hw)
     nk, nj, ni = dom_shape
     if stencil.is_vertical_solver():
         return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=False,
+                        carry_storage="vreg", region_strategy="predicated")
+    if hw.kind == "gpu":
+        bi = min(ni, 4 * hw.lane)
+        bj = 4
+        while (vmem_footprint(stencil, Schedule(block_i=bi, block_j=bj,
+                                                block_k=1), dom_shape,
+                              dtype_bytes) > hw.vmem_bytes and bj > 1):
+            bj //= 2
+        return Schedule(block_i=bi, block_j=bj, block_k=1, k_as_grid=True,
                         carry_storage="vreg", region_strategy="predicated")
     if stencil.has_k_offsets():
         return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=True,
                         carry_storage="vreg", region_strategy="predicated")
     bk = 1
-    while (vmem_footprint(stencil, Schedule(block_k=bk), dom_shape, dtype_bytes)
-           <= VMEM_BYTES // 2 and bk < nk):
+    while (vmem_footprint(stencil, Schedule(block_k=bk), dom_shape,
+                          dtype_bytes) <= hw.vmem_bytes // 2 and bk < nk):
         bk *= 2
     bk = min(bk, nk)
     return Schedule(block_i=0, block_j=0, block_k=bk, k_as_grid=True,

@@ -24,7 +24,8 @@ import itertools
 from typing import Callable
 
 from .graph import Node, State, StencilProgram
-from .perfmodel import Hardware, TPU_V5E, node_bound_seconds
+from .hardware import Hardware, resolve_hardware
+from .perfmodel import node_bound_seconds
 from .transforms import (
     can_otf_fuse,
     can_subgraph_fuse,
@@ -44,9 +45,18 @@ class Pattern:
     def describe(self) -> str:
         return f"{self.kind}({' -> '.join(self.labels)}) Δ={self.benefit * 1e6:.2f}us"
 
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "labels": list(self.labels),
+                "benefit": self.benefit}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Pattern":
+        return cls(d["kind"], tuple(d["labels"]), d["benefit"])
+
 
 def state_cost(program: StencilProgram, state: State,
-               hw: Hardware = TPU_V5E) -> float:
+               hw: Hardware | str | None = None) -> float:
+    hw = resolve_hardware(hw)
     return sum(node_bound_seconds(program, n, hw) + LAUNCH_OVERHEAD
                for n in state.nodes)
 
@@ -92,13 +102,43 @@ def _sgf_candidates(state: State, max_len: int = 4) -> list[list[Node]]:
 class Phase1Result:
     patterns: list[Pattern]
     n_configs: int          # total configurations evaluated (paper: 1,272)
+    from_cache: bool = False
+
+
+def _cutout_key(program: StencilProgram, kind: str, top_m: int,
+                hw: Hardware) -> str:
+    """Cache key for a phase-1 search: the cutout graphs are fully described
+    by their node stencil fingerprints in program order plus the domain."""
+    from .backend.cache import COST_MODEL_VERSION, make_key, stencil_fingerprint
+
+    states = [[stencil_fingerprint(n.stencil) for n in s.nodes]
+              for s in program.states]
+    return make_key("tune_cutouts", COST_MODEL_VERSION, states, program.dom,
+                    kind, top_m, hw.name)
 
 
 def tune_cutouts(program: StencilProgram, *, kind: str, top_m: int = 2,
-                 hw: Hardware = TPU_V5E,
+                 hw: Hardware | str | None = None,
                  measure: Callable[[StencilProgram], float] | None = None,
-                 ) -> Phase1Result:
-    """Phase 1 over every state of ``program`` for one transformation kind."""
+                 cache=None) -> Phase1Result:
+    """Phase 1 over every state of ``program`` for one transformation kind.
+
+    Model-driven searches are memoized in the persistent tuning cache (the
+    paper's 1,272-configuration FVT sweep runs once per machine, not once
+    per process); wall-clock objectives are never cached.
+    """
+    from .backend.cache import default_cache
+
+    hw = resolve_hardware(hw)
+    use_cache = None if measure is not None else (
+        cache if cache is not None else default_cache())
+    key = None
+    if use_cache is not None:
+        key = _cutout_key(program, kind, top_m, hw)
+        hit = use_cache.get(key)
+        if hit is not None:
+            return Phase1Result([Pattern.from_dict(p) for p in hit["patterns"]],
+                                hit["n_configs"], from_cache=True)
     patterns: list[Pattern] = []
     n_configs = 0
     for state in program.states:
@@ -135,10 +175,15 @@ def tune_cutouts(program: StencilProgram, *, kind: str, top_m: int = 2,
     # dedupe by label signature, keep best benefit
     best: dict[tuple, Pattern] = {}
     for p in patterns:
-        key = (p.kind, p.labels)
-        if key not in best or p.benefit > best[key].benefit:
-            best[key] = p
-    return Phase1Result(sorted(best.values(), key=lambda p: -p.benefit), n_configs)
+        k = (p.kind, p.labels)
+        if k not in best or p.benefit > best[k].benefit:
+            best[k] = p
+    result = Phase1Result(sorted(best.values(), key=lambda p: -p.benefit),
+                          n_configs)
+    if use_cache is not None:
+        use_cache.put(key, {"patterns": [p.to_dict() for p in result.patterns],
+                            "n_configs": result.n_configs})
+    return result
 
 
 @dataclasses.dataclass
@@ -149,9 +194,10 @@ class TransferResult:
 
 
 def transfer(program: StencilProgram, patterns: list[Pattern], *,
-             hw: Hardware = TPU_V5E) -> TransferResult:
+             hw: Hardware | str | None = None) -> TransferResult:
     """Phase 2: apply matching patterns across the whole program where the
     local model improves (paper: 20 OTF + 583 SGF transferred to FV3)."""
+    hw = resolve_hardware(hw)
     applied: list[tuple[str, str]] = []
     n_otf = n_sgf = 0
     for state in program.states:
@@ -198,12 +244,14 @@ def _find_match(state: State, pat: Pattern):
 
 
 def transfer_tune(source: StencilProgram, target: StencilProgram, *,
-                  top_m: int = 2, hw: Hardware = TPU_V5E,
+                  top_m: int = 2, hw: Hardware | str | None = None,
+                  cache=None,
                   ) -> tuple[Phase1Result, Phase1Result, TransferResult]:
     """The paper's full hierarchical pipeline: tune OTF on the source, apply;
     tune SGF on the OTF-optimized source; transfer both to the target."""
-    otf_res = tune_cutouts(source, kind="otf", top_m=top_m, hw=hw)
+    hw = resolve_hardware(hw)
+    otf_res = tune_cutouts(source, kind="otf", top_m=top_m, hw=hw, cache=cache)
     transfer(source, otf_res.patterns, hw=hw)      # optimize the source itself
-    sgf_res = tune_cutouts(source, kind="sgf", top_m=1, hw=hw)
+    sgf_res = tune_cutouts(source, kind="sgf", top_m=1, hw=hw, cache=cache)
     result = transfer(target, otf_res.patterns + sgf_res.patterns, hw=hw)
     return otf_res, sgf_res, result

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StencilProgram, strength_reduce_program
+from repro.core import StencilProgram, compile_program, strength_reduce_program
 from repro.core.stencil import DomainSpec
 from . import stencils as S
 from .halo import exchange_reference, make_halo_exchanger
@@ -215,7 +215,7 @@ def all_state_fields(cfg: FV3Config) -> list[str]:
 
 
 def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
-                   optimize: bool):
+                   optimize: bool, hardware=None):
     csw = build_csw_program(cfg, dom)
     dsw = build_dsw_program(cfg, dom)
     trc = build_tracer_program(cfg, dom)
@@ -223,9 +223,9 @@ def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
         for prog in (csw, dsw, trc):
             strength_reduce_program(prog)
     interpret = True
-    return (csw.compile(backend, interpret=interpret),
-            dsw.compile(backend, interpret=interpret),
-            trc.compile(backend, interpret=interpret))
+    return tuple(
+        compile_program(p, backend, hardware=hardware, interpret=interpret)
+        for p in (csw, dsw, trc))
 
 
 def _acoustic_iteration(cfg, runners, params, halo_fn, state):
@@ -273,10 +273,10 @@ def _remap_iteration(cfg, runners, params, halo_fn, state):
 
 
 def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
-                         optimize: bool = True) -> Callable:
+                         hardware=None, optimize: bool = True) -> Callable:
     """Physics step on global (6, nk, npx+2h, npx+2h) arrays, one device."""
     dom = cfg.seq_dom()
-    runners = _make_programs(cfg, dom, backend, optimize)
+    runners = _make_programs(cfg, dom, backend, optimize, hardware)
     params = default_params(cfg)
 
     def halo_fn(st, names):
@@ -319,7 +319,7 @@ def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
 
 
 def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
-                          optimize: bool = True,
+                          hardware=None, optimize: bool = True,
                           ensemble: bool = False) -> Callable:
     """shard_map'd physics step over mesh ("tile","y","x") — or, multi-pod,
     ("ens","tile","y","x") with independent ensemble members (the NWP
@@ -332,7 +332,7 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
 
     dom = cfg.local_dom()
     dec = cfg.decomposition()
-    runners = _make_programs(cfg, dom, backend, optimize)
+    runners = _make_programs(cfg, dom, backend, optimize, hardware)
     params = default_params(cfg)
     exchanger = make_halo_exchanger(dec)
     py, px = cfg.layout
@@ -356,7 +356,9 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
 
     spec = P("ens", "tile", "y", "x") if ensemble else P("tile", "y", "x")
     fields = all_state_fields(cfg)
-    sharded = jax.shard_map(
+    from repro.jaxcompat import shard_map
+
+    sharded = shard_map(
         local_step, mesh=mesh,
         in_specs=(dict.fromkeys(fields, spec),),
         out_specs=dict.fromkeys(fields, spec),

@@ -1,0 +1,26 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+``jax.shard_map`` and explicit mesh ``axis_types`` only exist in newer jax;
+older installs spell them ``jax.experimental.shard_map.shard_map`` and plain
+``jax.make_mesh``.  Everything in this repo that builds meshes or shard-maps
+goes through here so a single jax pin change never fans out.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicitly-Auto axes where supported."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

@@ -11,22 +11,18 @@ multi-pod workload for NWP (ensemble forecasting).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_fv3_mesh(*, layout: tuple[int, int] = (8, 8), ensemble: int = 1):
     """Cubed-sphere mesh: 6 × py × px ranks (+ optional ensemble axis)."""
     py, px = layout
     if ensemble > 1:
-        return jax.make_mesh((ensemble, 6, py, px), ("ens", "tile", "y", "x"),
-                             axis_types=(AxisType.Auto,) * 4)
-    return jax.make_mesh((6, py, px), ("tile", "y", "x"),
-                         axis_types=(AxisType.Auto,) * 3)
+        return make_mesh((ensemble, 6, py, px), ("ens", "tile", "y", "x"))
+    return make_mesh((6, py, px), ("tile", "y", "x"))

@@ -1,0 +1,75 @@
+"""Hypothesis when installed, else a tiny deterministic fallback.
+
+The repo's property tests (`@given` over integer/float/sampled/composite
+strategies) should not make the whole suite uncollectable on machines
+without hypothesis.  Importing ``given / settings / strategies`` from this
+module yields the real library when available; otherwise a minimal
+stand-in that runs each property test over a fixed, seeded sample of
+examples (no shrinking, no fixture support — the subset these tests use).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: random.Random):
+            return self._sample_fn(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: items[r.randrange(len(items))])
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strategy(lambda r: tuple(s.sample(r) for s in ss))
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def sample(r):
+                    return fn(lambda s: s.sample(r), *args, **kwargs)
+                return _Strategy(sample)
+            return make
+
+    strategies = _strategies()
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in strats))
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

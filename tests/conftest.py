@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+The tuning cache must never leak between the working tree and the test
+suite: a persistent ``./.repro_cache`` would serve stale search results
+after the cost model or fusion logic changes (the cache key carries no
+code version).  Every test session gets a throwaway cache directory.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_tuning_cache(tmp_path_factory):
+    from repro.core.backend.cache import TuningCache, set_default_cache
+
+    path = tmp_path_factory.mktemp("tuning_cache") / "tuning.json"
+    set_default_cache(TuningCache(path))
+    yield
+    set_default_cache(None)

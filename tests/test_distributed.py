@@ -28,12 +28,12 @@ def test_halo_distributed_matches_reference():
     out = run_sub("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.jaxcompat import make_mesh, shard_map
 from repro.fv3.topology import Decomposition
 from repro.fv3.halo import exchange_reference, make_halo_exchanger
 N, h, nk = 8, 3, 2
 dec = Decomposition(layout=(2, 2), n_local=N // 2, halo=h)
-mesh = jax.make_mesh((6, 2, 2), ("tile", "y", "x"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((6, 2, 2), ("tile", "y", "x"))
 ex = make_halo_exchanger(dec)
 rng = np.random.default_rng(0)
 glob = rng.standard_normal((6, nk, N + 2 * h, N + 2 * h)).astype(np.float32)
@@ -49,8 +49,8 @@ def run(b):
     def inner(lb):
         lb = lb.reshape(nk, nl + 2 * h, nl + 2 * h)
         return ex({"q": lb})["q"].reshape(1, 1, 1, nk, nl+2*h, nl+2*h)
-    return jax.shard_map(inner, mesh=mesh, in_specs=P("tile", "y", "x"),
-                         out_specs=P("tile", "y", "x"))(b)
+    return shard_map(inner, mesh=mesh, in_specs=P("tile", "y", "x"),
+                     out_specs=P("tile", "y", "x"))(b)
 res = np.asarray(jax.jit(run)(jnp.asarray(blocks)))
 refg = np.asarray(exchange_reference({"q": jnp.asarray(glob)}, h)["q"])
 refb = np.zeros_like(blocks)
@@ -69,14 +69,14 @@ print("HALO_OK", err)
 def test_dycore_distributed_matches_sequential():
     out = run_sub("""
 import numpy as np, jax
+from repro.jaxcompat import make_mesh
 from repro.fv3.dyncore import FV3Config, make_step_sequential, make_step_distributed
 from repro.fv3.state import init_state, blocks_from_global, global_from_blocks
 cfg = FV3Config(npx=12, nk=2, halo=6, layout=(2, 2), n_split=1, k_split=1,
                 n_tracers=1)
 state = init_state(cfg)
 s_seq = make_step_sequential(cfg)(state)
-mesh = jax.make_mesh((6, 2, 2), ("tile", "y", "x"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((6, 2, 2), ("tile", "y", "x"))
 blocks = blocks_from_global(state, cfg)
 b = make_step_distributed(cfg, mesh)(blocks)
 s_dist = global_from_blocks({k: np.asarray(v) for k, v in b.items()}, cfg)
@@ -97,6 +97,7 @@ def test_lm_sharded_loss_matches_single_device():
     code = """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.jaxcompat import make_mesh
 from repro.configs import smoke_config
 from repro.models import transformer as T
 from repro.parallel.sharding import init_params, param_shardings
@@ -106,8 +107,7 @@ params = init_params(defs, jax.random.PRNGKey(0))
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab)
 labels = jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab)
 l_single = float(T.loss_fn(params, tokens, labels, cfg, dtype=jnp.float32))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 shards = param_shardings(defs, mesh)
 p_sh = jax.device_put(params, shards)
 t_sh = jax.device_put(tokens, NamedSharding(mesh, P("data", None)))

@@ -1,13 +1,16 @@
 """Stencil DSL unit tests: parsing, oracle semantics, Pallas equivalence."""
 
+import functools
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core.stencil import (
-    DomainSpec, Field, Param, Schedule, compile_jnp, compile_pallas,
-    gtstencil,
-)
+from repro.core.backend import compile_stencil
+from repro.core.stencil import DomainSpec, Field, Param, Schedule, gtstencil
+
+compile_jnp = functools.partial(compile_stencil, backend="jnp")
+compile_pallas = functools.partial(compile_stencil, backend="pallas-tpu")
 
 
 @gtstencil

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import smoke_config
 from repro.data.pipeline import DataConfig, DataIterator, make_batch

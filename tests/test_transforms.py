@@ -5,7 +5,7 @@ hypothesis property tests over random stencil programs."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     StencilProgram, can_otf_fuse, can_subgraph_fuse, otf_fuse,
