@@ -7,13 +7,21 @@ annotations).  ``python -m benchmarks.run [--only tableX] [--smoke]``.
 instead runs the LoC accounting plus a backend round-trip check (jnp vs
 pallas-tpu interpret through ``compile_program`` on a small FVT program),
 finishing in well under a minute.
+
+Every unfiltered run (smoke included; ``--only`` skips it) also emits
+``BENCH_opt_ladder.json``: per ``opt_level`` wall time, kernel count, and
+modeled HBM traffic of the FV3 C-grid program through the automatic pass
+pipeline — CI archives it so the perf trajectory of the optimizer is
+tracked from PR 2 onward.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
+import time
 import traceback
 
 
@@ -65,11 +73,89 @@ def smoke_backend_roundtrip() -> list[str]:
             f"backends={'|'.join(available_backends())}"]
 
 
+def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
+                    smoke: bool = False) -> list[str]:
+    """Run the FV3 C-grid program through every opt level; write per-level
+    wall time, kernel count and cost-model HBM traffic to ``path``.
+
+    Wall time is the step time of the compiled callable itself — one
+    dispatch per kernel, the granularity whose launch overhead fusion
+    exists to remove (inside a whole-program ``jax.jit``, XLA:CPU re-fuses
+    and DCEs either variant, hiding exactly the effect being measured).
+    Levels are timed *interleaved* so machine-load drift between phases
+    cannot flip the comparison, and the min over repeats is reported
+    (the standard noise-robust microbenchmark estimator).
+    """
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import OPT_LADDERS, compile_program, program_bytes
+    from repro.fv3.dyncore import (FV3Config, build_csw_program,
+                                   default_params)
+
+    npx, nk = (16, 4) if smoke else (32, 8)
+    cfg = FV3Config(npx=npx, nk=nk, halo=6)
+    dom = cfg.seq_dom()
+    p = build_csw_program(cfg, dom)
+    params = default_params(cfg)
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                             jnp.float32)
+              for f in ("u", "v", "delp", "pt", "w", "cosa", "sina")}
+
+    lvls = sorted(OPT_LADDERS)
+    fns = {}
+    for lvl in lvls:
+        fn = compile_program(p, "jnp", opt_level=lvl)
+        jax.block_until_ready(fn(dict(fields), params))  # compile + warm
+        fns[lvl] = fn
+    ts: dict[int, list[float]] = {lvl: [] for lvl in lvls}
+    for _ in range(10 if smoke else 20):
+        for lvl in lvls:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[lvl](dict(fields), params))
+            ts[lvl].append(time.perf_counter() - t0)
+
+    levels = []
+    for lvl in lvls:
+        fn = fns[lvl]
+        rep = fn.opt_report
+        levels.append({
+            "opt_level": lvl,
+            "passes": list(OPT_LADDERS[lvl]),
+            "kernels": fn.n_kernels,
+            "hbm_bytes_model": (rep.hbm_bytes_after if rep is not None
+                                else program_bytes(p)),
+            "transient_hbm_inputs": len(fn.transient_inputs),
+            "wall_us": float(np.min(ts[lvl])) * 1e6,
+            "wall_us_median": float(np.median(ts[lvl])) * 1e6,
+        })
+    payload = {
+        "program": p.name,
+        "config": {"npx": npx, "nk": nk, "halo": cfg.halo, "smoke": smoke},
+        "measurement": "per-kernel dispatch, interleaved, min over repeats",
+        "levels": levels,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    base, top = levels[0], levels[-1]
+    return [
+        f"opt_ladder/opt{lv['opt_level']},{lv['wall_us']:.0f},"
+        f"kernels={lv['kernels']};hbm_model={lv['hbm_bytes_model']};"
+        f"transient_inputs={lv['transient_hbm_inputs']}"
+        for lv in levels
+    ] + [f"opt_ladder/speedup,0,"
+         f"wall={base['wall_us'] / max(top['wall_us'], 1e-9):.2f}x;"
+         f"kernels={base['kernels']}->{top['kernels']};json={path}"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: LoC table + backend round-trip only")
+    ap.add_argument("--ladder-json", default="BENCH_opt_ladder.json",
+                    help="output path for the opt-ladder perf JSON")
     args = ap.parse_args()
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
@@ -91,6 +177,14 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"smoke/ERROR,0,{traceback.format_exc()[-300:]!r}",
+                  file=sys.stderr)
+    if not args.only:
+        try:
+            for line in opt_ladder_json(args.ladder_json, smoke=args.smoke):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"opt_ladder/ERROR,0,{traceback.format_exc()[-300:]!r}",
                   file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -1,12 +1,14 @@
 """Table III analogue: the optimization-cycle ladder on the dynamical core.
 
-Applies the paper's pipeline cumulatively to the d_sw program (the acoustic
-step's stencil-heavy half) and reports, per rung:
+Since PR 2 the ladder *is* the production pass manager: each rung is an
+``opt_level`` of :func:`repro.core.passes.optimize_program`, exactly what
+``compile_program(..., opt_level=...)`` (and the FV3 dycore above it)
+applies — the benchmark and the production path can no longer drift apart.
+Per rung we report:
   * the memory-bound model step time (TPU v5e target) — the tuner's
-    objective on this container, and
-  * CPU wall-clock of the compiled jnp program — measurable confirmation
-    for the rungs that change the executed program (strength reduction,
-    fusion); schedule-only rungs change the model term only, as labeled.
+    objective on this container — plus kernel count and modeled HBM bytes,
+  * CPU wall-clock of the compiled jnp program, measurable confirmation for
+    the rungs that change the executed graph.
 
 Paper reference (P100): 16.36 s FORTRAN → 4.61 s after transfer tuning
 (3.55×).  The claim validated here is the *ordering and sign* of each rung.
@@ -20,143 +22,74 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    StencilProgram, compile_program, program_bound_seconds,
-    strength_reduce_program, transfer_tune, tune_cutouts, transfer,
+from repro.core import OPT_LADDERS, compile_program
+from repro.core.transfer_tuning import state_cost
+from repro.fv3.dyncore import (
+    FV3Config,
+    build_csw_program,
+    build_dsw_program,
+    default_params,
 )
-from repro.core.stencil import DomainSpec
-from repro.core.stencil.schedule import default_schedule, heuristic_schedule
-from repro.core.autotune import model_cost
-from repro.fv3.dyncore import FV3Config, build_dsw_program, build_csw_program
-from repro.fv3.dyncore import build_tracer_program, default_params
 
 N, NK = 48, 8
 
 
-def program_model_cost(p, schedules="default") -> float:
-    """Σ node model cost under a schedule policy (launch + traffic terms)."""
-    total = 0.0
-    shape = (p.dom.nk, p.dom.nj, p.dom.ni)
-    for n in p.all_nodes():
-        sched = n.schedule or (
-            heuristic_schedule(n.stencil, shape) if schedules == "heuristic"
-            else default_schedule(n.stencil, shape))
-        total += model_cost(n.stencil, sched, p.node_dom(n))
-    return total
+def program_model_cost(p, hw="tpu-v5e") -> float:
+    """Σ state model cost (launch + memory-bound traffic terms)."""
+    return sum(state_cost(p, s, hw) for s in p.states)
 
 
-def wall_clock(p, params) -> float:
-    rng = np.random.default_rng(0)
-    fields = {f: jnp.asarray(rng.uniform(0.8, 1.2, p.dom.padded_shape()),
-                             jnp.float32) for f in p.fields}
-    run = jax.jit(lambda f: compile_program(p, "jnp")(f, params))
-    jax.block_until_ready(run(fields))
+def wall_clock(run, fields, params) -> float:
+    jax.block_until_ready(run(dict(fields), params))
     ts = []
     for _ in range(3):
         t0 = time.perf_counter()
-        jax.block_until_ready(run(fields))
+        jax.block_until_ready(run(dict(fields), params))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
-
-
-def set_schedules(p, kind):
-    shape = (p.dom.nk, p.dom.nj, p.dom.ni)
-    for n in p.all_nodes():
-        sched = (heuristic_schedule if kind == "heuristic"
-                 else default_schedule)(n.stencil, shape)
-        if kind == "vreg":
-            import dataclasses
-            sched = dataclasses.replace(sched, carry_storage="vreg")
-        if kind == "split":
-            import dataclasses
-            sched = dataclasses.replace(sched, region_strategy="split")
-        n.schedule = sched
 
 
 def run() -> list[str]:
     cfg = FV3Config(npx=N, nk=NK, halo=6)
     dom = cfg.seq_dom()
     params = default_params(cfg)
+    rng = np.random.default_rng(0)
     lines = []
 
-    def fresh():
-        # the acoustic step's two stencil programs: c_sw+riemann holds the
-        # vertical solvers (schedule rungs), d_sw the horizontal/FVT motifs
-        return [build_csw_program(cfg, dom), build_dsw_program(cfg, dom)]
-
-    def cost_all(ps, kind="default"):
-        return sum(program_model_cost(p, kind) for p in ps)
-
-    def wall_all(ps):
-        return sum(wall_clock(p, params) for p in ps)
-
-    def sched_all(ps, kind):
-        for p in ps:
-            set_schedules(p, kind)
+    progs = [build_csw_program(cfg, dom), build_dsw_program(cfg, dom)]
+    inputs = [
+        {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                        jnp.float32)
+         for f in ("u", "v", "delp", "pt", "w", "cosa", "sina")},
+        {f: jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                        jnp.float32)
+         for f in ("u", "v", "delp", "pt", "delpc")},
+    ]
 
     ladder = []
-    # 1. default (vmem carries, whole-domain blocks, predicated regions)
-    ps = fresh()
-    sched_all(ps, "default")
-    ladder.append(("default", cost_all(ps), wall_all(ps)))
-
-    # 2. + schedule heuristics (K-slab grids for horizontal stencils)
-    ps = fresh()
-    sched_all(ps, "heuristic")
-    ladder.append(("heuristics", cost_all(ps, "heuristic"), ladder[0][2]))
-
-    # 3. + local caching (VREG carries in the vertical solvers)
-    ps = fresh()
-    sched_all(ps, "vreg")
-    ladder.append(("local_caching", cost_all(ps, "heuristic"), ladder[0][2]))
-
-    # 4. + power-operator strength reduction
-    ps = fresh()
-    sched_all(ps, "vreg")
-    for p in ps:
-        strength_reduce_program(p)
-    ladder.append(("power_op", cost_all(ps, "heuristic"), wall_all(ps)))
-
-    # 5. + split regions
-    ps5 = fresh()
-    sched_all(ps5, "split")
-    for p in ps5:
-        strength_reduce_program(p)
-    ladder.append(("split_regions", cost_all(ps5, "heuristic"), ladder[3][2]))
-
-    # 6. + transfer tuning (tune on the FVT module, apply to the dycore)
-    src = build_tracer_program(cfg, dom)
-    tgt = fresh()
-    sched_all(tgt, "vreg")
-    for p in tgt:
-        strength_reduce_program(p)
-    otf_res = sgf_res = None
-    from repro.core import tune_cutouts, transfer as apply_patterns
-    otf_res = tune_cutouts(src, kind="otf", top_m=2)
-    apply_patterns(src, otf_res.patterns)
-    sgf_res = tune_cutouts(tgt[1], kind="sgf", top_m=1)
-    tres_total = [0, 0]
-    for p in tgt:
-        tr = apply_patterns(p, otf_res.patterns + sgf_res.patterns)
-        tres_total[0] += tr.n_otf
-        tres_total[1] += tr.n_sgf
-    class _T:
-        n_otf, n_sgf = tres_total
-    tres = _T()
-    ladder.append(("transfer_tuning", cost_all(tgt, "heuristic"),
-                   wall_all(tgt)))
+    for lvl in sorted(OPT_LADDERS):
+        model = wall = 0.0
+        kernels = rewrites = 0
+        for p, fields in zip(progs, inputs):
+            # one compile per rung: the stats come from the same optimized
+            # clone that is timed (fn.program / fn.opt_report)
+            run_fn = compile_program(p, "jnp", opt_level=lvl)
+            model += program_model_cost(run_fn.program)
+            kernels += run_fn.n_kernels
+            if run_fn.opt_report is not None:
+                rewrites += run_fn.opt_report.total_rewrites
+            wall += wall_clock(run_fn, fields, params)
+        name = "+".join(OPT_LADDERS[lvl][-1:]) or "default"
+        ladder.append((f"opt{lvl}_{name}", model, wall, kernels, rewrites))
 
     base_model, base_wall = ladder[0][1], ladder[0][2]
-    for name, model_s, wall_s in ladder:
+    for name, model_s, wall_s, kernels, rewrites in ladder:
         lines.append(
             f"table3/{name},{wall_s * 1e6:.0f},"
             f"model_bound_us={model_s * 1e6:.1f};"
+            f"kernels={kernels};rewrites={rewrites};"
             f"model_speedup={base_model / model_s:.2f}x;"
             f"wall_speedup={base_wall / wall_s:.2f}x")
-    lines.append(f"table3/transfer_counts,0,"
-                 f"otf_configs={otf_res.n_configs};"
-                 f"sgf_configs={sgf_res.n_configs};"
-                 f"applied_otf={tres.n_otf};applied_sgf={tres.n_sgf}")
     return lines
 
 

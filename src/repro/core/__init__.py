@@ -20,9 +20,20 @@ from .backend import (  # noqa: F401
     compile_program,
     compile_stencil,
     default_cache,
+    donation_supported,
     get_backend,
     register_backend,
     set_default_cache,
+)
+from .passes import (  # noqa: F401
+    OPT_LADDERS,
+    PassContext,
+    PassStats,
+    PipelineReport,
+    available_passes,
+    get_pass,
+    optimize_program,
+    register_pass,
 )
 from .orchestration import Monitor, bind_constants, orchestrate  # noqa: F401
 from .perfmodel import (  # noqa: F401

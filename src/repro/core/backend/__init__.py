@@ -32,6 +32,7 @@ from .compile import (  # noqa: F401
     compile_cache_stats,
     compile_program,
     compile_stencil,
+    donation_supported,
 )
 
 # importing the modules registers the built-in backends

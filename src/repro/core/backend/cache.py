@@ -35,7 +35,7 @@ _CACHE_VERSION = 1
 #: ``node_bound_seconds``, schedule enumeration or the fusion transforms
 #: change behavior, so persisted results from the old model are never
 #: served for the new one.
-COST_MODEL_VERSION = 2
+COST_MODEL_VERSION = 3
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:
@@ -80,6 +80,9 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.puts = 0
 
 
 class TuningCache:

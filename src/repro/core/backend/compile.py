@@ -1,9 +1,18 @@
 """``compile_program`` — the single entry point of the compilation pipeline.
 
-frontend → IR → graph → **backend** → schedule/tuning: every consumer
-(`StencilProgram.compile`, `orchestrate`, the FV3 dycore, examples,
+frontend → IR → graph → **passes** → backend → schedule/tuning: every
+consumer (`StencilProgram.compile`, `orchestrate`, the FV3 dycore, examples,
 benchmarks) funnels through here; no module outside this package touches a
 lowering directly.
+
+``opt_level`` applies the automatic optimization ladder of
+:mod:`repro.core.passes` to a clone of the program before lowering: pruning,
+strength reduction, cost-model-guided fusion and transfer-tuned schedule
+assignment (paper §VI).  The compiled callable threads only *live* fields
+between kernels: inputs a node actually consumes are auto-allocated when
+missing, and transient containers are dropped from the environment after
+their last reader — after fusion they never exist in HBM at all, because
+fused subgraphs keep them as kernel-local scratch.
 
 Per-node compiled runners are memoized in-process keyed by
 (stencil fingerprint, schedule, backend, hardware, domain, interpret):
@@ -15,6 +24,7 @@ via :func:`compile_cache_stats`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import TYPE_CHECKING, Any, Callable, Mapping
 
 import jax
@@ -38,7 +48,19 @@ def compile_cache_stats() -> dict:
 
 
 def clear_compile_cache() -> None:
+    """Drop memoized runners AND reset the hit/miss counters — benchmark
+    harnesses call this between runs and must not read stale numbers."""
     _runner_memo.clear()
+    _runner_stats.reset()
+
+
+def donation_supported() -> bool:
+    """True when buffer donation actually takes effect for the active JAX
+    platform (purely platform-based, not per-backend).  The sequential CPU
+    path neither benefits nor supports it — XLA emits a 'donated buffer was
+    not usable' warning and ignores the hint — so callers gate
+    ``donate=True`` through this predicate."""
+    return jax.default_backend() in ("gpu", "tpu")
 
 
 def compile_stencil(stencil, dom, *, backend: "str | Backend" = "jnp",
@@ -79,14 +101,42 @@ def _resolve_override(node: "Node", overrides) -> Schedule | None:
     return node.schedule
 
 
+def _liveness(program: "StencilProgram", runners) -> tuple[list, list]:
+    """Static dataflow facts for the run loop.
+
+    ``inputs``: program fields some node consumes before any node writes
+    them — the only fields the runner must materialize (auto-allocating the
+    rest would resurrect exactly the transient HBM arrays fusion removed).
+
+    ``drop_after[i]``: transient fields whose last use is node ``i`` — they
+    leave the environment immediately, so XLA sees their true live ranges.
+    """
+    inputs: list[str] = []
+    written: set[str] = set()
+    last_use: dict[str, int] = {}
+    for i, (n, _) in enumerate(runners):
+        for f in n.stencil.fields:
+            if f not in written and f not in inputs:
+                inputs.append(f)
+            last_use[f] = i
+        written |= set(n.writes())
+    drop_after: list[list[str]] = [[] for _ in runners]
+    for f, i in last_use.items():
+        decl = program.fields.get(f)
+        if decl is not None and decl.transient:
+            drop_after[i].append(f)
+    return inputs, drop_after
+
+
 def compile_program(program: "StencilProgram",
                     backend: "str | Backend" = "jnp", *,
                     hardware: Hardware | str | None = None,
                     schedule_overrides: Mapping[str, Schedule] | None = None,
                     interpret: bool = True,
-                    donate: bool = False) -> Callable:
+                    donate: bool = False,
+                    opt_level: int = 0) -> Callable:
     """Compile a whole :class:`StencilProgram` into one functional callable
-    ``fn(fields: dict, params: dict) -> dict`` (all fields threaded).
+    ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
     ``backend`` is a registry name (``"jnp"``, ``"pallas-tpu"``,
     ``"pallas-gpu"``) or a :class:`Backend` instance; ``hardware`` a
@@ -94,9 +144,30 @@ def compile_program(program: "StencilProgram",
     ``schedule_overrides`` maps node labels (``"al_x#3"``) or motif base
     names (``"al_x"``) to :class:`Schedule` objects, overriding any
     schedule stored on the node.
+
+    ``opt_level`` (0–3) selects the automatic optimization ladder
+    (:mod:`repro.core.passes`) applied to a *clone* of ``program`` —
+    the caller's graph is never mutated.  ``donate=True`` donates the
+    input fields dict to the jitted step, but only on platforms where XLA
+    honors donation (TPU/GPU); on CPU the flag degrades to a plain ``jit``
+    instead of triggering per-call XLA warnings (see
+    :func:`donation_supported`).
+
+    The returned callable exposes introspection attributes:
+    ``n_kernels`` (number of compiled runners), ``opt_report`` (the
+    :class:`~repro.core.passes.PipelineReport`, ``None`` at level 0),
+    ``program`` (the graph actually lowered), ``input_fields`` and
+    ``transient_inputs`` (fields auto-allocated when the caller omits
+    them — empty of transients once fusion has localized them).
     """
     be = get_backend(backend)
     hw = be.resolve_hw(hardware)
+    opt_report = None
+    if opt_level:
+        from ..passes import optimize_program
+
+        program, opt_report = optimize_program(
+            program, opt_level=opt_level, backend=be.name, hardware=hw)
     runners = []
     for s in program.states:
         for n in s.nodes:
@@ -108,29 +179,51 @@ def compile_program(program: "StencilProgram",
 
     fields_decl = program.fields
     dom_shape = program.dom.padded_shape()
+    inputs, drop_after = _liveness(program, runners)
 
     def run(fields: dict, params: dict | None = None) -> dict:
         params = dict(params or {})
         env = dict(fields)
         template = next((v for v in fields.values()
                          if hasattr(v, "dtype")), None)
-        for name, decl in fields_decl.items():
+        for name in inputs:
             if name not in env:
-                # auto-allocated (typically transient) containers — the
-                # backend owns allocation, never the user (paper §IV-A).
-                # A varying-zero from an input keeps shard_map's manual-
-                # axes (VMA) tracking consistent inside scan carries.
+                # consumed before any write and not supplied — the backend
+                # owns allocation, never the user (paper §IV-A).  A varying-
+                # zero from an input keeps shard_map's manual-axes (VMA)
+                # tracking consistent inside scan carries.
+                decl = fields_decl[name]
                 z = jnp.zeros(dom_shape, decl.dtype)
                 if template is not None:
                     z = z + (template.ravel()[0] * 0).astype(decl.dtype)
                 env[name] = z
-        for n, r in runners:
+        for i, (n, r) in enumerate(runners):
             ins = {f: env[f] for f in n.stencil.fields}
             ps = {p: params[p] for p in n.stencil.params}
-            out = r(ins, ps)
-            env.update(out)
+            env.update(r(ins, ps))
+            for f in drop_after[i]:
+                env.pop(f, None)
         return env
 
+    fn: Callable = run
+    donated = False
     if donate:
-        return jax.jit(run, donate_argnums=(0,))
-    return run
+        if donation_supported():
+            jitted = jax.jit(run, donate_argnums=(0,))
+            donated = True
+        else:
+            jitted = jax.jit(run)
+
+        @functools.wraps(run)
+        def fn(fields: dict, params: dict | None = None) -> dict:
+            return jitted(fields, params)
+
+    fn.n_kernels = len(runners)
+    fn.opt_report = opt_report
+    fn.program = program
+    fn.input_fields = tuple(inputs)
+    fn.transient_inputs = tuple(
+        f for f in inputs
+        if f in fields_decl and fields_decl[f].transient)
+    fn.donated = donated
+    return fn

@@ -132,12 +132,23 @@ def _apply_parallel(comp: Computation, env: dict, dom: DomainSpec) -> None:
 
 def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec) -> None:
     """fori_loop over k; reads of already-written levels observe updates —
-    exact forward/backward solver semantics."""
+    exact forward/backward solver semantics.
+
+    Only arrays this computation actually touches ride in the loop carry:
+    fused mega-stencils hold many fields, and carrying untouched ones
+    through every level is pure copy traffic."""
     written = comp.written()
     lo = min(st.interval.resolve(dom.nk)[0] for st in comp.statements)
     hi = max(st.interval.resolve(dom.nk)[1] for st in comp.statements)
+    used = set()
+    for st in comp.statements:
+        used.add(st.target)
+        for a in st.value.accesses():
+            used.add(a.name)
     names = list(env.keys())
-    arrays = {n: env[n] for n in names if hasattr(env[n], "shape") and getattr(env[n], "ndim", 0) == 3}
+    arrays = {n: env[n] for n in names
+              if hasattr(env[n], "shape") and getattr(env[n], "ndim", 0) == 3
+              and n in used}
     scalars = {n: env[n] for n in names if n not in arrays}
     forward = comp.direction is Direction.FORWARD
     w = dom.write_window

@@ -30,6 +30,7 @@ from typing import Any, Mapping
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ..stencil.domain import DomainSpec
 from ..stencil.ir import (
@@ -40,6 +41,7 @@ from ..stencil.ir import (
     Direction,
     Expr,
     FieldAccess,
+    Interval,
     Max,
     Min,
     ParamRef,
@@ -107,6 +109,21 @@ def _hwindow(dom: DomainSpec, dj: int, di: int):
             slice(h - ei + di, h + dom.ni + ei + di))
 
 
+def _kshift_read(ref, dk: int, nk: int, jsl, isl):
+    """Static K-shifted slice of a (K, J, I) block ref, edge-padded back to
+    nk rows — the one K-offset read idiom shared by the horizontal kernel
+    and the PARALLEL passes of vertical kernels.  Interval restrictions
+    make the padded rows dead."""
+    if dk == 0:
+        return ref[:, jsl, isl]
+    sl = ref[max(0, dk):nk + min(0, dk), jsl, isl]
+    if dk > 0:
+        pad = jnp.broadcast_to(sl[-1:], (dk,) + sl.shape[1:])
+        return jnp.concatenate([sl, pad], axis=0)
+    pad = jnp.broadcast_to(sl[:1], (-dk,) + sl.shape[1:])
+    return jnp.concatenate([pad, sl], axis=0)
+
+
 def _region_mask_block(region: Region, dom: DomainSpec):
     ei, ej = dom.extend
     ilo, ihi, jlo, jhi = region.resolve(dom.ni, dom.nj)
@@ -114,6 +131,61 @@ def _region_mask_block(region: Region, dom: DomainSpec):
     jj = jax.lax.broadcasted_iota(jnp.int32, (nj_w, ni_w), 0) - ej
     ii = jax.lax.broadcasted_iota(jnp.int32, (nj_w, ni_w), 1) - ei
     return (jj >= jlo) & (jj < jhi) & (ii >= ilo) & (ii < ihi)
+
+
+def _inline_offset_temps(stencil: Stencil) -> Stencil:
+    """OTF-style inlining of temporary reads at nonzero offsets.
+
+    In-kernel temporaries live on the write window, so a read like PPM's
+    ``br[-1, 0, 0]`` has no backing storage for the shifted cells.  Instead
+    of materializing the temporary, replace every offset read with the
+    defining expression shifted by that offset (the same substitution OTF
+    map fusion performs between stencils).  Expandable temporaries have a
+    single full-interval, region-free definition whose field-level expansion
+    reads only fields the stencil never overwrites; zero-offset reads keep
+    using the computed window value.
+    """
+    temps = set(stencil.temporaries())
+    if not temps:
+        return stencil
+    written_fields = {w for w in stencil.written() if w in stencil.fields}
+    stmts = [s for c in stencil.computations for s in c.statements]
+    n_defs: dict[str, int] = {}
+    for s in stmts:
+        if s.target in temps:
+            n_defs[s.target] = n_defs.get(s.target, 0) + 1
+    expansions: dict[str, Expr] = {}
+    full = Interval()
+    for s in stmts:
+        t = s.target
+        if (t not in temps or n_defs[t] != 1 or s.region is not None
+                or s.interval != full):
+            continue
+
+        def expand(e: Expr) -> Expr:
+            if isinstance(e, FieldAccess) and e.name in expansions:
+                return expansions[e.name].shift(e.offset)
+            return e.map_children(expand)
+
+        expr = expand(s.value)
+        reads = {a.name for a in expr.accesses()}
+        if reads & temps or reads & written_fields:
+            continue  # chain through an unexpandable temp, or the inputs
+            # change after the definition point — recompute would be wrong
+        expansions[t] = expr
+
+    def rewrite(e: Expr) -> Expr:
+        if (isinstance(e, FieldAccess) and e.name in expansions
+                and e.offset != (0, 0, 0)):
+            return expansions[e.name].shift(e.offset)
+        return e.map_children(rewrite)
+
+    comps = tuple(
+        Computation(c.direction, tuple(
+            Assign(s.target, rewrite(s.value), s.interval, s.region)
+            for s in c.statements))
+        for c in stencil.computations)
+    return dataclasses.replace(stencil, computations=comps)
 
 
 # ---------------------------------------------------------------------------
@@ -147,34 +219,27 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
         def read(name, off):
             di, dj, dk = off
             jsl, isl = _hwindow(dom, dj, di)
-            if name in env:  # temporary or freshly computed value
-                src = env[name]
-                return src if (di, dj, dk) == (0, 0, 0) else None
             ref = out_refs.get(name, in_refs.get(name))
-            if dk == 0:
-                return ref[:, jsl, isl]
-            # K-offset read (bk == nk): static shifted slice, edge-padded —
-            # interval restrictions make the padded rows dead.
-            sl = ref[max(0, dk):nk + min(0, dk) if dk < 0 else nk, jsl, isl]
-            # pad to block K extent with edge rows (interval masks make the
-            # padded rows dead)
-            if dk > 0:
-                pad = jnp.broadcast_to(sl[-1:], (dk,) + sl.shape[1:])
-                return jnp.concatenate([sl, pad], axis=0)
-            if dk < 0:
-                pad = jnp.broadcast_to(sl[:1], (-dk,) + sl.shape[1:])
-                return jnp.concatenate([pad, sl], axis=0)
-            return sl
-
-        def read_resolved(name, off):
-            di, dj, dk = off
             if name in env and (di, dj, dk) == (0, 0, 0):
                 return env[name]
-            if name in env:
+            if name in env and (ref is None or (di, dj) != (0, 0)):
+                # kernel-local temporary at an offset, or a horizontal offset
+                # of freshly-written values (the ref's halo ring still holds
+                # input data) — unrepresentable in one kernel.
+                return None
+            # K-offset reads require bk == nk (enforced above).  For fields
+            # written earlier in a fused kernel this reads the ref, which
+            # carries updated values in the window and the input copy
+            # elsewhere — exact sequential-statement semantics.
+            return _kshift_read(ref, dk, nk, jsl, isl)
+
+        def read_resolved(name, off):
+            out = read(name, off)
+            if out is None:
                 raise NotImplementedError(
                     f"offset read {off} of in-kernel temporary {name!r}; "
                     "allocate it as a field or fuse with OTF instead")
-            return read(name, off)
+            return out
 
         ei, ej = dom.extend
         blk_k = bk
@@ -262,13 +327,14 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
         for comp in stencil.computations:
             if comp.direction is Direction.PARALLEL:
-                # elementwise pass inside a solver stencil
+                # elementwise pass inside a solver stencil (fused subgraphs
+                # mix PARALLEL and solver computations in one mega-kernel)
                 kk = jax.lax.broadcasted_iota(jnp.int32, (nk,) + shape2d, 0)
                 for st in comp.statements:
                     def read_par(name, off):
                         di, dj, dk = off
                         js, is_ = _hwindow(dom, dj, di)
-                        return ref_of(name)[:, js, is_]
+                        return _kshift_read(ref_of(name), dk, nk, js, is_)
                     val = _eval_block(st.value, read_par, params)
                     klo, khi = st.interval.resolve(nk)
                     tgt = ref_of(st.target)
@@ -330,7 +396,9 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
     full = pl.BlockSpec((nk, njp, nip), lambda _: (0, 0, 0))
     in_specs = ([full for _ in fields] +
                 [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
-    out_specs = [full for _ in written] + [full for _ in temps]
+    # stencil temporaries live in VMEM scratch — fused subgraphs keep their
+    # internalized transients out of HBM entirely (paper §VI-A)
+    out_specs = [full for _ in written]
     return kernel, grid, in_specs, out_specs, written, temps
 
 
@@ -341,10 +409,14 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
                    schedule: Schedule | None = None, dtype=jnp.float32,
-                   interpret: bool = True):
+                   interpret: bool = True, scratch_temps: bool = True):
     """Compile a stencil into a Pallas-backed functional callable.
 
     ``interpret=True`` executes on CPU for validation; on TPU pass False.
+    ``scratch_temps`` keeps vertical-solver temporaries in ``pltpu.VMEM``
+    scratch (never materialized in HBM); the GPU backend passes False —
+    the TPU memory-space spec does not exist in the Triton lowering — and
+    falls back to temporaries as extra outputs.
     """
     sched = schedule or default_schedule(stencil, (dom.nk, dom.nj, dom.ni))
     param_names = list(stencil.params)
@@ -354,23 +426,38 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
         kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(
             stencil, dom, sched, param_names)
 
+        # scratch refs arrive after the outputs in kernel argument order —
+        # the same positions temporaries-as-outputs occupy, so the kernel
+        # body is agnostic to which mechanism backs them
+        if scratch_temps:
+            scratch = [pltpu.VMEM(shape, dtype) for _ in temps]
+        else:
+            scratch = []
+            full = pl.BlockSpec(shape, lambda _: (0, 0, 0))
+            out_specs = out_specs + [full for _ in temps]
+
         def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
             params = dict(params or {})
             args = ([jnp.asarray(fields[f]) for f in stencil.fields] +
                     [jnp.asarray(params[p], dtype=dtype).reshape(1)
                      for p in param_names])
-            out_shapes = ([jax.ShapeDtypeStruct(shape, args[0].dtype)
-                           for _ in written] +
-                          [jax.ShapeDtypeStruct(shape, dtype) for _ in temps])
+            out_shapes = [jax.ShapeDtypeStruct(shape, args[0].dtype)
+                          for _ in written]
+            if not scratch_temps:
+                out_shapes += [jax.ShapeDtypeStruct(shape, dtype)
+                               for _ in temps]
             outs = pl.pallas_call(
                 kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
-                out_shape=out_shapes, interpret=interpret,
+                out_shape=out_shapes, scratch_shapes=scratch,
+                interpret=interpret,
             )(*args)
             return dict(zip(written, outs[:len(written)]))
 
         return jax.jit(run)
 
-    # horizontal stencil — possibly split regions into separate kernels
+    # horizontal stencil — inline offset-read temporaries (PPM's br[-1]),
+    # then possibly split regions into separate kernels
+    stencil = _inline_offset_temps(stencil)
     statements = [st for c in stencil.computations for st in c.statements]
     if sched.region_strategy == "split":
         main = [st for st in statements if st.region is None]

@@ -22,6 +22,10 @@ from .lowering_pallas import compile_pallas
 class PallasTPUBackend(Backend):
     name = "pallas-tpu"
     default_hardware = "tpu-v5e"
+    #: vertical-solver temporaries live in pltpu.VMEM scratch (never HBM);
+    #: the GPU backend opts out — the TPU memory-space spec has no Triton
+    #: equivalent — and keeps temporaries as extra outputs instead
+    scratch_temps = True
 
     def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
                         schedule: Schedule | None = None,
@@ -32,7 +36,8 @@ class PallasTPUBackend(Backend):
                 stencil, (dom.nk, dom.nj, dom.ni), hardware)
         kwargs = {} if dtype is None else {"dtype": dtype}
         return compile_pallas(stencil, dom, schedule=schedule,
-                              interpret=interpret, **kwargs)
+                              interpret=interpret,
+                              scratch_temps=self.scratch_temps, **kwargs)
 
 
 class PallasGPUBackend(PallasTPUBackend):
@@ -46,6 +51,7 @@ class PallasGPUBackend(PallasTPUBackend):
 
     name = "pallas-gpu"
     default_hardware = "p100"
+    scratch_temps = False
 
 
 register_backend(PallasTPUBackend())

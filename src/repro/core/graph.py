@@ -12,6 +12,7 @@ makes graph transformations (fusion, inlining) direct IR rewrites.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Any, Callable, Mapping
 
@@ -131,6 +132,17 @@ class StencilProgram:
         (state or self.states[-1]).nodes.append(node)
         return node
 
+    def copy(self) -> "StencilProgram":
+        """Deep-copy the graph (states/nodes/field decls); stencil IR inside
+        nodes is copied too, so transformation passes never alias the
+        original.  ``dom`` is immutable and shared."""
+        q = StencilProgram(self.name, self.dom)
+        q.states = copy.deepcopy(self.states)
+        q.fields = {k: dataclasses.replace(v) for k, v in self.fields.items()}
+        q.params = list(self.params)
+        q._counter = self._counter
+        return q
+
     # -- queries ---------------------------------------------------------------
     def all_nodes(self) -> list[Node]:
         return [n for s in self.states for n in s.nodes]
@@ -190,19 +202,22 @@ class StencilProgram:
     # -- execution ---------------------------------------------------------------
     def compile(self, backend: str = "jnp", *, hardware=None,
                 schedule_overrides=None, interpret: bool = True,
-                donate: bool = False) -> Callable:
+                donate: bool = False, opt_level: int = 0) -> Callable:
         """Compile the whole program into one functional callable
-        ``fn(fields: dict, params: dict) -> dict`` (all fields threaded).
+        ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
         Thin wrapper over :func:`repro.core.backend.compile_program`; the
         backend registry resolves ``backend``/``hardware`` names (the legacy
-        ``"pallas"`` spelling aliases to ``"pallas-tpu"``).
+        ``"pallas"`` spelling aliases to ``"pallas-tpu"``), and
+        ``opt_level`` selects the automatic optimization ladder
+        (:mod:`repro.core.passes`) applied to a clone of this program.
         """
         from .backend import compile_program
 
         return compile_program(self, backend, hardware=hardware,
                                schedule_overrides=schedule_overrides,
-                               interpret=interpret, donate=donate)
+                               interpret=interpret, donate=donate,
+                               opt_level=opt_level)
 
     def __repr__(self):
         lines = [f"program {self.name}: {len(self.all_nodes())} nodes, "

@@ -54,16 +54,24 @@ def bind_constants(fn: Callable, **consts) -> Callable:
 
 
 def orchestrate(program_or_fn, *, backend: str = "jnp", hardware=None,
-                donate: bool = True, interpret: bool = True) -> Callable:
-    """Compile a StencilProgram (or plain function) into one jitted step."""
-    from .backend import compile_program
+                donate: bool = True, interpret: bool = True,
+                opt_level: int = 0) -> Callable:
+    """Compile a StencilProgram (or plain function) into one jitted step.
+
+    ``opt_level`` selects the automatic optimization ladder
+    (:mod:`repro.core.passes`) for StencilProgram inputs.  ``donate=True``
+    donates the fields dict only on platforms where XLA honors donation
+    (TPU/GPU); the sequential CPU path would warn and ignore it, so there
+    the flag degrades to a plain ``jit``.
+    """
+    from .backend import compile_program, donation_supported
     from .graph import StencilProgram
 
     if isinstance(program_or_fn, StencilProgram):
         fn = compile_program(program_or_fn, backend, hardware=hardware,
-                             interpret=interpret)
+                             interpret=interpret, opt_level=opt_level)
     else:
         fn = program_or_fn
-    if donate:
+    if donate and donation_supported():
         return jax.jit(fn, donate_argnums=(0,))
     return jax.jit(fn)

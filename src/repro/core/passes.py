@@ -1,0 +1,317 @@
+"""Automatic full-program optimization — the pass manager (paper §V–VI).
+
+The paper's headline speedups come from applying the same optimization
+*ladder* to the whole dataflow graph without user intervention: prune the
+removable containers, strength-reduce the expensive operators, fuse the
+repeating stencil motifs, then assign transfer-tuned schedules.  This module
+packages those steps as registered passes selected by an ``opt_level``
+(Devito's pass-manager idiom on DaCe-style graph rewrites):
+
+ * ``opt_level=0`` — no transformation (the debuggable 1:1 lowering);
+ * ``opt_level=1`` — ``prune_transients`` + ``strength_reduce``;
+ * ``opt_level=2`` — plus ``greedy_fuse``: cost-model-guided OTF
+   producer/consumer inlining and subgraph fusion of connected runs,
+   each rewrite accepted only when the analytical model under the active
+   :class:`~repro.core.hardware.Hardware` predicts a win *and* the fused
+   kernel's working set still fits fast memory;
+ * ``opt_level=3`` — plus ``tune_schedules``: per-motif schedule assignment
+   through :func:`~repro.core.autotune.tune_stencil`, memoized in the
+   persistent tuning cache (one search per machine, not per process).
+
+Every pass is a pure graph rewrite ``fn(program, ctx) -> n_rewrites``;
+:func:`optimize_program` clones the input program (callers' graphs are never
+mutated) and returns the optimized clone plus a :class:`PipelineReport` with
+per-pass timing, rewrite counts, and the modeled kernel/HBM-traffic deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from .graph import Node, State, StencilProgram
+from .hardware import Hardware, resolve_hardware
+from .perfmodel import program_bytes
+from .stencil.schedule import heuristic_schedule, vmem_footprint
+from .transfer_tuning import otf_candidates, sgf_candidates, state_cost
+from .transforms import (
+    can_subgraph_fuse,
+    otf_fuse,
+    prune_transients,
+    strength_reduce_program,
+    subgraph_fuse,
+)
+
+PassFn = Callable[[StencilProgram, "PassContext"], int]
+
+_PASSES: dict[str, PassFn] = {}
+
+#: ladder per opt level; each level extends the previous (paper Table III's
+#: cumulative rungs)
+OPT_LADDERS: dict[int, tuple[str, ...]] = {
+    0: (),
+    1: ("prune_transients", "strength_reduce"),
+    2: ("prune_transients", "strength_reduce", "greedy_fuse"),
+    3: ("prune_transients", "strength_reduce", "greedy_fuse",
+        "tune_schedules"),
+}
+
+MAX_OPT_LEVEL = max(OPT_LADDERS)
+
+
+@dataclasses.dataclass
+class PassContext:
+    """Everything a pass may consult: the compilation target and the
+    persistent tuning cache (``None`` → the process default)."""
+
+    backend: str = "jnp"
+    hardware: Hardware | str | None = None
+    cache: object | None = None
+
+    def hw(self) -> Hardware:
+        return resolve_hardware(self.hardware)
+
+
+@dataclasses.dataclass
+class PassStats:
+    name: str
+    rewrites: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    """Observable result of one :func:`optimize_program` run."""
+
+    opt_level: int
+    backend: str
+    hardware: str
+    passes: list[PassStats] = dataclasses.field(default_factory=list)
+    kernels_before: int = 0
+    kernels_after: int = 0
+    hbm_bytes_before: int = 0
+    hbm_bytes_after: int = 0
+
+    @property
+    def total_rewrites(self) -> int:
+        return sum(p.rewrites for p in self.passes)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(p.seconds for p in self.passes)
+
+    def summary(self) -> str:
+        lines = [f"opt_level={self.opt_level} [{self.backend}/{self.hardware}]"
+                 f": kernels {self.kernels_before} -> {self.kernels_after}, "
+                 f"modeled HBM bytes {self.hbm_bytes_before} -> "
+                 f"{self.hbm_bytes_after}"]
+        for p in self.passes:
+            lines.append(f"  {p.name:20s} rewrites={p.rewrites:4d} "
+                         f"{p.seconds * 1e3:8.2f} ms")
+        return "\n".join(lines)
+
+    def as_dict(self) -> dict:
+        return {
+            "opt_level": self.opt_level,
+            "backend": self.backend,
+            "hardware": self.hardware,
+            "kernels_before": self.kernels_before,
+            "kernels_after": self.kernels_after,
+            "hbm_bytes_before": self.hbm_bytes_before,
+            "hbm_bytes_after": self.hbm_bytes_after,
+            "passes": [dataclasses.asdict(p) for p in self.passes],
+        }
+
+
+def register_pass(name: str, fn: PassFn | None = None):
+    """Register a graph pass (usable as a decorator)."""
+    def deco(f: PassFn) -> PassFn:
+        _PASSES[name] = f
+        return f
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def available_passes() -> list[str]:
+    return sorted(_PASSES)
+
+
+def get_pass(name: str) -> PassFn:
+    try:
+        return _PASSES[name]
+    except KeyError:
+        raise KeyError(f"unknown pass {name!r}; registered: "
+                       f"{', '.join(available_passes())}") from None
+
+
+# ---------------------------------------------------------------------------
+# Built-in passes
+# ---------------------------------------------------------------------------
+
+
+@register_pass("prune_transients")
+def _prune_transients(program: StencilProgram, ctx: PassContext) -> int:
+    return prune_transients(program)
+
+
+@register_pass("strength_reduce")
+def _strength_reduce(program: StencilProgram, ctx: PassContext) -> int:
+    return strength_reduce_program(program)
+
+
+def _fused_schedule(program: StencilProgram, node: Node, hw: Hardware):
+    """The schedule the fused node will actually lower with: its own if one
+    survived fusion, else the hardware heuristic (which acceptance assigns,
+    so the footprint check below and the emitted kernel always agree)."""
+    shape = program.node_dom(node).shape()
+    return node.schedule or heuristic_schedule(node.stencil, shape, hw=hw)
+
+
+def _fused_fits(program: StencilProgram, node: Node, hw: Hardware) -> bool:
+    """A fused kernel is feasible only if (a) its compounded read reach plus
+    its write extent stays inside the allocation halo (inlined producers
+    stack their offsets onto the consumer's), and (b) its working set under
+    the schedule it will lower with fits fast memory."""
+    if (max(node.extend) + node.stencil.max_halo() > program.dom.halo):
+        return False
+    shape = program.node_dom(node).shape()
+    sched = _fused_schedule(program, node, hw)
+    return vmem_footprint(node.stencil, sched, shape) <= hw.vmem_bytes
+
+
+def _greedy_otf(program: StencilProgram, state: State, hw: Hardware) -> int:
+    """Repeatedly inline the most-profitable producer/consumer pair until the
+    model stops predicting wins (paper's OTF hierarchy level).
+
+    Trial fusions are reverted cheaply: ``otf_fuse`` mutates only the
+    consumer node (stencil/label) and the state's node list, so a shallow
+    snapshot suffices — no graph deepcopy per candidate.
+    """
+    n = 0
+    while True:
+        before = state_cost(program, state, hw)
+        best = None  # (benefit, producer, consumer)
+        for prod, cons in otf_candidates(state):
+            snapshot = (list(state.nodes), cons.stencil, cons.label)
+            fused = otf_fuse(program, state, prod, cons)
+            after = state_cost(program, state, hw)
+            if (after < before and _fused_fits(program, fused, hw)
+                    and (best is None or before - after > best[0])):
+                best = (before - after, prod, cons)
+            state.nodes, cons.stencil, cons.label = snapshot
+        if best is None:
+            return n
+        fused = otf_fuse(program, state, best[1], best[2])
+        fused.schedule = _fused_schedule(program, fused, hw)
+        n += 1
+
+
+def _greedy_sgf(program: StencilProgram, state: State, hw: Hardware,
+                max_len: int = 6) -> int:
+    """Greedily merge the most-profitable connected run into one kernel until
+    no candidate improves the model (paper's SGF hierarchy level).
+
+    ``subgraph_fuse`` never mutates member nodes (it builds a fresh fused
+    node), so reverting a trial is just restoring the node list.
+    """
+    n = 0
+    while True:
+        before = state_cost(program, state, hw)
+        best = None  # (benefit, member nodes)
+        for nodes in sgf_candidates(state, max_len=max_len):
+            if not can_subgraph_fuse(nodes, halo=program.dom.halo):
+                continue
+            snapshot = list(state.nodes)
+            fused = subgraph_fuse(program, state, list(nodes))
+            after = state_cost(program, state, hw)
+            if (after < before and _fused_fits(program, fused, hw)
+                    and (best is None or before - after > best[0])):
+                best = (before - after, list(nodes))
+            state.nodes = snapshot
+        if best is None:
+            return n
+        fused = subgraph_fuse(program, state, best[1])
+        fused.schedule = _fused_schedule(program, fused, hw)
+        n += 1
+
+
+@register_pass("greedy_fuse")
+def _greedy_fuse(program: StencilProgram, ctx: PassContext) -> int:
+    """Cost-model-guided fusion: OTF first, then SGF on the OTF-optimized
+    graph (the paper's transformation hierarchy), per state."""
+    hw = ctx.hw()
+    n = 0
+    for state in program.states:
+        n += _greedy_otf(program, state, hw)
+        n += _greedy_sgf(program, state, hw)
+    return n
+
+
+@register_pass("tune_schedules")
+def _tune_schedules(program: StencilProgram, ctx: PassContext) -> int:
+    """Per-motif schedule assignment through the persistent tuning cache:
+    each distinct (stencil, domain) is searched once per machine; identical
+    motif instances (FVT's repeated chains) share the cached result.
+
+    Every node is (re-)tuned — including fused nodes that carry the
+    feasibility heuristic from ``greedy_fuse``.  To pin a schedule against
+    the tuner, pass ``schedule_overrides`` to ``compile_program``; those
+    override node schedules at lowering time.
+    """
+    from .autotune import tune_stencil
+
+    hw = ctx.hw()
+    n = 0
+    for node in program.all_nodes():
+        dom = program.node_dom(node)
+        results = tune_stencil(node.stencil, dom, hw=hw, backend=ctx.backend,
+                               cache=ctx.cache)
+        if results and results[0].cost != float("inf"):
+            node.schedule = results[0].schedule
+            n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Pipeline driver
+# ---------------------------------------------------------------------------
+
+
+def ladder_for(opt_level: int) -> tuple[str, ...]:
+    if opt_level < 0:
+        raise ValueError(f"opt_level must be >= 0, got {opt_level}")
+    return OPT_LADDERS[min(opt_level, MAX_OPT_LEVEL)]
+
+
+def optimize_program(program: StencilProgram, *, opt_level: int = 3,
+                     backend: str = "jnp",
+                     hardware: Hardware | str | None = None,
+                     cache=None,
+                     passes: tuple[str, ...] | None = None,
+                     inplace: bool = False,
+                     ) -> tuple[StencilProgram, PipelineReport]:
+    """Run the opt ladder for ``opt_level`` (or an explicit ``passes`` list)
+    over a clone of ``program``; returns ``(optimized, report)``.
+
+    The clone preserves the caller's graph: `compile_program` can be invoked
+    repeatedly at different opt levels on the same program object.
+    """
+    hw = resolve_hardware(hardware)
+    names = ladder_for(opt_level) if passes is None else tuple(passes)
+    prog = program if inplace else program.copy()
+    report = PipelineReport(
+        opt_level=opt_level, backend=backend, hardware=hw.name,
+        kernels_before=len(prog.all_nodes()),
+        hbm_bytes_before=program_bytes(prog))
+    ctx = PassContext(backend=backend, hardware=hw, cache=cache)
+    for name in names:
+        fn = get_pass(name)
+        t0 = time.perf_counter()
+        rewrites = fn(prog, ctx)
+        report.passes.append(
+            PassStats(name, rewrites, time.perf_counter() - t0))
+    report.kernels_after = len(prog.all_nodes())
+    report.hbm_bytes_after = program_bytes(prog)
+    return prog, report

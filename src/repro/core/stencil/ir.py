@@ -455,19 +455,48 @@ class Stencil:
 
     def extents(self) -> dict[str, tuple[int, int, int, int, int, int]]:
         """Per-field halo extent (ilo,ihi,jlo,jhi,klo,khi) inferred from
-        accesses — the paper's transparent buffer-size inference."""
+        accesses — the paper's transparent buffer-size inference.
+
+        Temporary reads are folded *transitively* through their definitions:
+        a read of temporary ``t`` at offset ``o`` reaches every field ``t``'s
+        definition touches at ``o`` plus that access's own offset (PPM's
+        ``br[-1]`` whose definition reads ``q[1]`` is a ``q[0]`` reach, and
+        after fusion compounds can exceed any single direct offset).  Without
+        the folding, fused stencils under-report their halo requirement and
+        read outside the allocation.
+        """
         ext: dict[str, list[int]] = {}
+        temps = set(self.temporaries())
+        # (source field, field-level offset) pairs per temporary, folded in
+        # statement order
+        temp_src: dict[str, set[tuple[str, Offset]]] = {}
+
+        def record(name: str, off: Offset) -> None:
+            e = ext.setdefault(name, [0, 0, 0, 0, 0, 0])
+            di, dj, dk = off
+            e[0] = min(e[0], di)
+            e[1] = max(e[1], di)
+            e[2] = min(e[2], dj)
+            e[3] = max(e[3], dj)
+            e[4] = min(e[4], dk)
+            e[5] = max(e[5], dk)
+
         for c in self.computations:
             for s in c.statements:
+                reach: set[tuple[str, Offset]] = set()
                 for a in s.value.accesses():
-                    e = ext.setdefault(a.name, [0, 0, 0, 0, 0, 0])
-                    di, dj, dk = a.offset
-                    e[0] = min(e[0], di)
-                    e[1] = max(e[1], di)
-                    e[2] = min(e[2], dj)
-                    e[3] = max(e[3], dj)
-                    e[4] = min(e[4], dk)
-                    e[5] = max(e[5], dk)
+                    if a.name in temp_src:
+                        for f, o in temp_src[a.name]:
+                            comp = tuple(x + y for x, y
+                                         in zip(a.offset, o))
+                            record(f, comp)  # type: ignore[arg-type]
+                            reach.add((f, comp))  # type: ignore[arg-type]
+                    else:
+                        # plain field, or a temp read before its definition
+                        record(a.name, a.offset)
+                        reach.add((a.name, a.offset))
+                if s.target in temps:
+                    temp_src[s.target] = temp_src.get(s.target, set()) | reach
         return {k: tuple(v) for k, v in ext.items()}  # type: ignore[return-value]
 
     def max_halo(self) -> int:

@@ -71,16 +71,33 @@ def _clone_cutout(program: StencilProgram, state: State
     return cut, new_state
 
 
-def _otf_candidates(state: State) -> list[tuple[Node, Node]]:
+def otf_candidates(state: State) -> list[tuple[Node, Node]]:
+    """All (producer, consumer) pairs OTF fusion could inline in ``state``.
+
+    Beyond the pairwise :func:`can_otf_fuse` rules, inlining moves the
+    producer's computation to the consumer's position in program order, so
+    no intervening node may overwrite either the producer's inputs or the
+    shared fields themselves (e.g. Courant numbers computed from the
+    pre-update winds must not be recomputed after ``wind_update``).
+    """
     out = []
     for i, prod in enumerate(state.nodes):
-        for cons in state.nodes[i + 1:]:
-            if set(prod.writes()) & set(cons.reads()) and can_otf_fuse(prod, cons):
-                out.append((prod, cons))
+        for j in range(i + 1, len(state.nodes)):
+            cons = state.nodes[j]
+            shared = set(prod.writes()) & set(cons.reads())
+            if not shared or not can_otf_fuse(prod, cons):
+                continue
+            def_reads = {a.name for c in prod.stencil.computations
+                         for s in c.statements if s.target in shared
+                         for a in s.value.accesses()}
+            if any((def_reads | shared) & set(mid.writes())
+                   for mid in state.nodes[i + 1:j]):
+                continue
+            out.append((prod, cons))
     return out
 
 
-def _sgf_candidates(state: State, max_len: int = 4) -> list[list[Node]]:
+def sgf_candidates(state: State, max_len: int = 4) -> list[list[Node]]:
     """Weakly-connected consecutive runs with ≥2 nodes (paper: 'weakly
     connected subgraphs of the state with at least two maps')."""
     out = []
@@ -145,7 +162,7 @@ def tune_cutouts(program: StencilProgram, *, kind: str, top_m: int = 2,
         base_cost = state_cost(program, state, hw)
         scored: list[Pattern] = []
         if kind == "otf":
-            for prod, cons in _otf_candidates(state):
+            for prod, cons in otf_candidates(state):
                 n_configs += 1
                 cut, cst = _clone_cutout(program, state)
                 p2 = next(n for n in cst.nodes if n.label == prod.label)
@@ -157,7 +174,7 @@ def tune_cutouts(program: StencilProgram, *, kind: str, top_m: int = 2,
                                           (prod.base_name, cons.base_name),
                                           base_cost - cost))
         elif kind == "sgf":
-            for nodes in _sgf_candidates(state):
+            for nodes in sgf_candidates(state):
                 n_configs += 1
                 cut, cst = _clone_cutout(program, state)
                 members = [n for n in cst.nodes
@@ -230,7 +247,7 @@ def transfer(program: StencilProgram, patterns: list[Pattern], *,
 
 def _find_match(state: State, pat: Pattern):
     if pat.kind == "otf":
-        for prod, cons in _otf_candidates(state):
+        for prod, cons in otf_candidates(state):
             if (prod.base_name, cons.base_name) == pat.labels:
                 return (prod, cons)
         return None

@@ -94,14 +94,24 @@ def can_otf_fuse(producer: Node, consumer: Node) -> bool:
     shared = set(producer.writes()) & set(consumer.reads())
     if not shared:
         return False
+    # a consumer that overwrites a shared field would have its later reads
+    # of that field substituted with the *producer's* stale value instead of
+    # its own update (f = f*2; h = f+1 must see the doubled f)
+    if shared & set(consumer.stencil.written()):
+        return False
     for c in producer.stencil.computations:
         for s in c.statements:
             if s.target in shared and (s.region is not None):
                 return False
     # every shared field must have exactly one defining statement whose RHS
     # reads only *fields* (a chain through producer temporaries would need
-    # transitive inlining — SGF handles those instead)
+    # transitive inlining — SGF handles those instead), and none of those
+    # fields may be overwritten by the consumer: the inlined recompute would
+    # otherwise observe the consumer's updated values instead of the inputs
+    # the producer originally read (e.g. vorticity inlined into wind_update,
+    # which updates u/v in place).
     temps = set(producer.stencil.temporaries())
+    cons_written = set(consumer.stencil.written())
     for f in shared:
         defs = [s for c in producer.stencil.computations
                 for s in c.statements if s.target == f]
@@ -109,6 +119,8 @@ def can_otf_fuse(producer: Node, consumer: Node) -> bool:
             return False
         for a in defs[0].value.accesses():
             if a.offset[2] != 0 or a.name in temps:
+                return False
+            if a.name in cons_written:
                 return False
     return True
 
@@ -233,8 +245,12 @@ def subgraph_fuse(program: StencilProgram, state: State,
             outputs=tuple(f for f in fused_st.outputs if f not in internal))
 
     first = min(state.nodes.index(n) for n in nodes)
+    # members are raised to the max extend (see can_subgraph_fuse: computing
+    # extra halo cells reproduces what the neighbor would have exchanged)
+    extend = (max(n.extend[0] for n in nodes),
+              max(n.extend[1] for n in nodes))
     node = Node(label=f"{name}#f{first}", stencil=fused_st,
-                extend=nodes[0].extend, schedule=nodes[0].schedule)
+                extend=extend, schedule=nodes[0].schedule)
     for n in nodes:
         state.nodes.remove(n)
     state.nodes.insert(first, node)

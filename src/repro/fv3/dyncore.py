@@ -27,10 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StencilProgram, compile_program, strength_reduce_program
+from repro.core import StencilProgram, compile_program
 from repro.core.stencil import DomainSpec
 from . import stencils as S
 from .halo import exchange_reference, make_halo_exchanger
+from .overlap import make_overlapped_runner
 from .topology import Decomposition, sphere_center
 
 TRACER_NAMES = ("qvapor", "qliquid", "qice", "qrain")
@@ -97,8 +98,12 @@ def build_csw_program(cfg: FV3Config, dom: DomainSpec) -> StencilProgram:
     p = StencilProgram("c_sw+riem", dom)
     for f in ["u", "v", "delp", "pt", "w", "cosa", "sina"]:
         p.declare(f)
-    for f in ["div", "delpc", "ptc", "pe", "aa", "bb", "cc", "rhs", "pp",
-              "cflux"]:
+    # delpc/ptc escape the program (the dycore driver exchanges delpc and
+    # feeds both into d_sw) — they must stay materialized, so they are NOT
+    # transient; fusion passes may localize everything below.
+    for f in ["delpc", "ptc"]:
+        p.declare(f)
+    for f in ["div", "pe", "aa", "bb", "cc", "rhs", "pp", "cflux"]:
         p.declare(f, transient=True)
     p.add(S.divergence, {"u": "u", "v": "v", "div": "div"})
     p.add(S.csw_update, {"delp": "delp", "pt": "pt", "div": "div",
@@ -214,33 +219,74 @@ def all_state_fields(cfg: FV3Config) -> list[str]:
     return list(STATE_FIELDS) + list(cfg.tracers)
 
 
+def _resolve_opt_level(optimize: bool, opt_level: int | None) -> int:
+    """``opt_level`` wins when given; the legacy ``optimize`` flag maps to
+    the full automatic ladder (True) or the untransformed graph (False)."""
+    if opt_level is not None:
+        return opt_level
+    return 3 if optimize else 0
+
+
+def _build_programs(cfg: FV3Config, dom: DomainSpec):
+    return (build_csw_program(cfg, dom), build_dsw_program(cfg, dom),
+            build_tracer_program(cfg, dom))
+
+
 def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
-                   optimize: bool, hardware=None):
-    csw = build_csw_program(cfg, dom)
-    dsw = build_dsw_program(cfg, dom)
-    trc = build_tracer_program(cfg, dom)
-    if optimize:
-        for prog in (csw, dsw, trc):
-            strength_reduce_program(prog)
-    interpret = True
-    return tuple(
-        compile_program(p, backend, hardware=hardware, interpret=interpret)
-        for p in (csw, dsw, trc))
+                   opt_level: int, hardware=None):
+    """Build the three stencil programs and compile each through the
+    automatic optimization ladder (the paper's opt pipeline applies to the
+    whole dycore with no per-program hand-tuning)."""
+    progs = _build_programs(cfg, dom)
+    runners = tuple(
+        compile_program(p, backend, hardware=hardware, interpret=True,
+                        opt_level=opt_level)
+        for p in progs)
+    return progs, runners
 
 
-def _acoustic_iteration(cfg, runners, params, halo_fn, state):
+def _csw_inputs(src):
+    """c_sw input dict from a state dict (cosa/sina: fixed synthetic grid
+    metric terms shared by every execution path)."""
+    ones = jnp.ones_like(src["delp"])
+    return {"u": src["u"], "v": src["v"], "delp": src["delp"],
+            "pt": src["pt"], "w": src["w"],
+            "cosa": 0.2 * ones, "sina": 0.8 * ones}
+
+
+def _acoustic_iteration(cfg, runners, params, halo_fn, state, overlap=None):
     """One acoustic substep on local (or per-tile) padded arrays.
 
     Structure matches the paper's blue region (Fig. 2): c_sw-lite +
     riem_solver_c, halo update of the C-grid mass, then d_sw-lite with FVT.
+
+    With ``overlap`` (distributed path), each exchanged program computes its
+    full domain from the *pre-exchange* state — no data dependence on the
+    ppermute rounds, so XLA launches interior compute concurrently with the
+    collectives — and recomputes only the edge strips from the exchanged
+    arrays afterwards (:mod:`repro.fv3.overlap`).
     """
+    if overlap is not None and overlap[0] is not None and overlap[1] is not None:
+        ov_csw, ov_dsw, _ = overlap
+        st = dict(state)
+        ex = halo_fn(st, list(STATE_FIELDS))          # ppermute rounds
+        out = ov_csw(_csw_inputs(st), _csw_inputs(ex),
+                     params)                          # interior ∥ exchange
+        st = ex
+        st["w"] = out["w"]
+        delpc = halo_fn({**st, "delpc": out["delpc"]}, ["delpc"])["delpc"]
+        dsw_stale = {"u": st["u"], "v": st["v"], "delp": st["delp"],
+                     "pt": st["pt"], "delpc": out["delpc"]}
+        dsw_fresh = {**dsw_stale, "delpc": delpc}
+        out2 = ov_dsw(dsw_stale, dsw_fresh, params)   # interior ∥ exchange
+        st["u"], st["v"] = out2["u"], out2["v"]
+        st["delp"], st["pt"] = out2["delp_out"], out2["pt_out"]
+        return st
+
     run_csw, run_dsw, _ = runners
     st = dict(state)
     st = halo_fn(st, list(STATE_FIELDS))
-    ones = jnp.ones_like(st["delp"])
-    csw_in = {"u": st["u"], "v": st["v"], "delp": st["delp"], "pt": st["pt"],
-              "w": st["w"], "cosa": 0.2 * ones, "sina": 0.8 * ones}
-    out = run_csw(csw_in, params)
+    out = run_csw(_csw_inputs(st), params)
     st["w"] = out["w"]
     # d_sw's Smagorinsky reads delpc at extent (1,1) — one scalar exchange
     delpc = halo_fn({**st, "delpc": out["delpc"]}, ["delpc"])["delpc"]
@@ -252,16 +298,26 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state):
     return st
 
 
-def _remap_iteration(cfg, runners, params, halo_fn, state):
+def _remap_iteration(cfg, runners, params, halo_fn, state, overlap=None):
     _, _, run_trc = runners
     st = dict(state)
     for _ in range(cfg.n_split):
-        st = _acoustic_iteration(cfg, runners, params, halo_fn, st)
-    st = halo_fn(st, ["u", "v", *cfg.tracers])
-    trc_in = {"u": st["u"], "v": st["v"]}
-    for q in cfg.tracers:
-        trc_in[q] = st[q]
-    out = run_trc(trc_in, params)
+        st = _acoustic_iteration(cfg, runners, params, halo_fn, st,
+                                 overlap=overlap)
+    if overlap is not None and overlap[2] is not None:
+        ex = halo_fn(st, ["u", "v", *cfg.tracers])
+        stale = {"u": st["u"], "v": st["v"],
+                 **{q: st[q] for q in cfg.tracers}}
+        fresh = {"u": ex["u"], "v": ex["v"],
+                 **{q: ex[q] for q in cfg.tracers}}
+        out = overlap[2](stale, fresh, params)        # interior ∥ exchange
+        st = ex
+    else:
+        st = halo_fn(st, ["u", "v", *cfg.tracers])
+        trc_in = {"u": st["u"], "v": st["v"]}
+        for q in cfg.tracers:
+            trc_in[q] = st[q]
+        out = run_trc(trc_in, params)
     for q in cfg.tracers:
         st[q] = out[f"{q}_out"]
     # vertical remap back to reference levels
@@ -273,10 +329,13 @@ def _remap_iteration(cfg, runners, params, halo_fn, state):
 
 
 def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
-                         hardware=None, optimize: bool = True) -> Callable:
+                         hardware=None, optimize: bool = True,
+                         opt_level: int | None = None) -> Callable:
     """Physics step on global (6, nk, npx+2h, npx+2h) arrays, one device."""
     dom = cfg.seq_dom()
-    runners = _make_programs(cfg, dom, backend, optimize, hardware)
+    _, runners = _make_programs(cfg, dom, backend,
+                                _resolve_opt_level(optimize, opt_level),
+                                hardware)
     params = default_params(cfg)
 
     def halo_fn(st, names):
@@ -320,23 +379,52 @@ def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
 
 def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
                           hardware=None, optimize: bool = True,
-                          ensemble: bool = False) -> Callable:
+                          opt_level: int | None = None,
+                          ensemble: bool = False,
+                          overlap: bool = True) -> Callable:
     """shard_map'd physics step over mesh ("tile","y","x") — or, multi-pod,
     ("ens","tile","y","x") with independent ensemble members (the NWP
     production multi-pod workload).
 
     Input state: per-rank local blocks laid out
     ([ens,] tile, y, x, nk, nl+2h, nl+2h).
+
+    ``overlap=True`` hides halo-exchange latency by splitting each exchanged
+    program's domain (:mod:`repro.fv3.overlap`): interior compute runs from
+    the pre-exchange state concurrently with the ppermute rounds, edge
+    strips are recomputed afterwards.  It degrades automatically to the
+    sequential exchange-then-compute ordering when the local interior is
+    too small (``n_local <= 2*halo``) to hold a strip-free core.
     """
     from jax.sharding import PartitionSpec as P
 
     dom = cfg.local_dom()
     dec = cfg.decomposition()
-    runners = _make_programs(cfg, dom, backend, optimize, hardware)
+    lvl = _resolve_opt_level(optimize, opt_level)
+    progs = _build_programs(cfg, dom)
     params = default_params(cfg)
     exchanger = make_halo_exchanger(dec)
     py, px = cfg.layout
     nl, h, nk = cfg.n_local, cfg.halo, cfg.nk
+
+    ov = None
+    if overlap:
+        cands = tuple(
+            make_overlapped_runner(p, backend=backend, hardware=hardware,
+                                   opt_level=lvl)
+            for p in progs)
+        if all(c is not None for c in cands):
+            ov = cands
+    if ov is not None:
+        # the overlapped runners embed the opt-ladder-compiled full-domain
+        # program — reuse it rather than running the optimizer again for
+        # fallback runners the overlap branch never calls
+        runners = tuple(c.full_run for c in ov)
+    else:
+        runners = tuple(
+            compile_program(p, backend, hardware=hardware, interpret=True,
+                            opt_level=lvl)
+            for p in progs)
 
     def halo_fn(st, names):
         vec = [("u", "v")] if ("u" in names and "v" in names) else []
@@ -350,7 +438,8 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         st = {k: v.reshape(nk, nl + 2 * h, nl + 2 * h)
               for k, v in state.items()}
         for _ in range(cfg.k_split):
-            st = _remap_iteration(cfg, runners, params, halo_fn, st)
+            st = _remap_iteration(cfg, runners, params, halo_fn, st,
+                                  overlap=ov)
         return {k: v.reshape((1,) * lead + (nk, nl + 2 * h, nl + 2 * h))
                 for k, v in st.items()}
 

@@ -242,3 +242,47 @@ def test_tune_cutouts_hits_persistent_cache(tmp_path):
 def test_stencil_fingerprint_is_content_addressed():
     assert stencil_fingerprint(_lap) == stencil_fingerprint(_lap)
     assert stencil_fingerprint(_lap) != stencil_fingerprint(S.al_x)
+
+
+# ---------------------------------------------------------------------------
+# in-process compile memo + donation gating
+# ---------------------------------------------------------------------------
+
+
+def test_clear_compile_cache_resets_stats():
+    """Regression: clearing the runner memo must also reset the hit/miss
+    counters, or benchmark harnesses report stale numbers across runs."""
+    from repro.core.backend import clear_compile_cache
+    from repro.core.backend.compile import compile_cache_stats
+
+    dom = DomainSpec(ni=8, nj=8, nk=2, halo=2)
+    clear_compile_cache()
+    assert compile_cache_stats() == {"hits": 0, "misses": 0, "puts": 0}
+    compile_stencil(_lap, dom, backend="jnp")
+    compile_stencil(_lap, dom, backend="jnp")
+    stats = compile_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    clear_compile_cache()
+    assert compile_cache_stats() == {"hits": 0, "misses": 0, "puts": 0}
+    # memo was dropped too: the next compile is a miss, not a hit
+    compile_stencil(_lap, dom, backend="jnp")
+    assert compile_cache_stats()["misses"] == 1
+
+
+def test_donation_gated_on_platform():
+    """``donate=True`` must not request donation on platforms where XLA
+    ignores it (the sequential CPU path) — the flag degrades to plain jit."""
+    import jax
+    from repro.core.backend import donation_supported
+
+    assert donation_supported() == (jax.default_backend() in ("gpu", "tpu"))
+    p, dom = _lap_program()
+    rng = np.random.default_rng(3)
+    fields = {f: jnp.asarray(rng.uniform(0.5, 1.5, dom.padded_shape()),
+                             jnp.float32) for f in ("q", "out")}
+    fn = compile_program(p, "jnp", donate=True)
+    assert fn.donated == donation_supported()
+    ref = compile_program(p, "jnp")(dict(fields))
+    got = fn(dict(fields))
+    np.testing.assert_allclose(np.asarray(ref["out"]), np.asarray(got["out"]),
+                               rtol=1e-6)

@@ -76,6 +76,30 @@ def test_otf_fusion_preserves_semantics(fields):
         np.testing.assert_allclose(base[k], fused[k], rtol=1e-6)
 
 
+def test_otf_rejects_consumer_overwriting_shared_field():
+    """Regression: producer `f = g+1` into consumer `f = f*2; h = f+1` must
+    be rejected — substituting every read of f would make the h statement
+    see the producer's stale value (h=3) instead of the update (h=5)."""
+    from repro.core.stencil.ir import (Assign, Computation, Direction,
+                                       FieldAccess, Const, BinOp, Interval,
+                                       Stencil)
+    from repro.core.graph import Node
+
+    prod = Stencil(name="p", computations=(
+        Computation(Direction.PARALLEL, (
+            Assign("f", BinOp("+", FieldAccess("g"), Const(1.0)),
+                   Interval()),)),),
+        fields=("g", "f"), outputs=("f",))
+    cons = Stencil(name="c", computations=(
+        Computation(Direction.PARALLEL, (
+            Assign("f", BinOp("*", FieldAccess("f"), Const(2.0)),
+                   Interval()),
+            Assign("h", BinOp("+", FieldAccess("f"), Const(1.0)),
+                   Interval()),)),),
+        fields=("f", "h"), outputs=("f", "h"))
+    assert not can_otf_fuse(Node("p#1", prod), Node("c#2", cons))
+
+
 def test_otf_reduces_bytes(fields):
     p0, p1 = build_program(), build_program()
     otf_fuse(p1, p1.states[0], p1.states[0].nodes[0], p1.states[0].nodes[1])
