@@ -11,8 +11,10 @@ finishing in well under a minute.
 Every unfiltered run (smoke included; ``--only`` skips it) also emits
 ``BENCH_opt_ladder.json``: per ``opt_level`` wall time, kernel count, and
 modeled HBM traffic of the FV3 C-grid program through the automatic pass
-pipeline — CI archives it so the perf trajectory of the optimizer is
-tracked from PR 2 onward.
+pipeline, plus a ``step_dispatch`` section comparing the scan-rolled
+single-jit model step against the old unrolled multi-dispatch loop — CI
+archives it so the perf trajectory of the optimizer is tracked from PR 2
+onward.
 """
 
 from __future__ import annotations
@@ -149,6 +151,84 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
          f"kernels={base['kernels']}->{top['kernels']};json={path}"]
 
 
+def step_dispatch_metric(path: str = "BENCH_opt_ladder.json",
+                         smoke: bool = False) -> list[str]:
+    """Full-model-step dispatch benchmark: the scan-rolled single-jit step
+    vs the old unrolled Python loop, at opt_level 3.
+
+    Reports wall time, trace+compile time, Python-level kernel dispatches
+    issued while tracing (the scan path traces each program once; the
+    unrolled path re-traces per substep) and acoustic-body trace counts.
+    Results are merged into ``path`` under ``"step_dispatch"`` so CI
+    archives the single-dispatch trajectory next to the opt ladder.
+    """
+    import jax
+    import numpy as np
+    from repro.core.backend import clear_compile_cache
+    from repro.fv3.dyncore import FV3Config, make_step_sequential
+    from repro.fv3.state import init_state
+
+    npx, nk = (8, 4) if smoke else (16, 8)
+    cfg = FV3Config(npx=npx, nk=nk, halo=6, n_split=2, k_split=1,
+                    n_tracers=1)
+    reps = 3 if smoke else 10
+    modes = {}
+    for mode, unroll in (("unrolled", True), ("scan", False)):
+        # cold in-process compile memo per mode: the first mode must not
+        # donate its runner-cache warmth to the second's trace_compile_s
+        clear_compile_cache()
+        step = make_step_sequential(cfg, opt_level=3, unroll=unroll,
+                                    donate=True)
+        # donation invalidates the input where the platform honors it, so
+        # each call feeds the previous call's output (fresh initial state
+        # per mode keeps the two variants comparable)
+        state = init_state(cfg)
+        t0 = time.perf_counter()
+        state = step(state)                          # trace + compile + run
+        jax.block_until_ready(state)
+        trace_s = time.perf_counter() - t0
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state = step(state)
+            jax.block_until_ready(state)
+            ts.append(time.perf_counter() - t0)
+        modes[mode] = {
+            "wall_us": float(np.min(ts)) * 1e6,
+            "trace_compile_s": trace_s,
+            "kernel_dispatches_per_trace":
+                step.counters["runner_dispatches"],
+            "acoustic_body_traces": step.counters["acoustic_traces"],
+            "n_kernels": step.n_kernels,
+        }
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        payload = {}
+    payload["step_dispatch"] = {
+        "config": {"npx": npx, "nk": nk, "n_split": cfg.n_split,
+                   "k_split": cfg.k_split, "smoke": smoke, "opt_level": 3},
+        "modes": modes,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    lines = [
+        f"step_dispatch/{mode},{m['wall_us']:.0f},"
+        f"dispatches={m['kernel_dispatches_per_trace']};"
+        f"acoustic_traces={m['acoustic_body_traces']};"
+        f"trace_s={m['trace_compile_s']:.2f}"
+        for mode, m in modes.items()
+    ]
+    old, new = modes["unrolled"], modes["scan"]
+    lines.append(
+        f"step_dispatch/summary,0,"
+        f"wall={old['wall_us'] / max(new['wall_us'], 1e-9):.2f}x;"
+        f"dispatches={old['kernel_dispatches_per_trace']}->"
+        f"{new['kernel_dispatches_per_trace']};json={path}")
+    return lines
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -185,6 +265,14 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"opt_ladder/ERROR,0,{traceback.format_exc()[-300:]!r}",
+                  file=sys.stderr)
+        try:
+            for line in step_dispatch_metric(args.ladder_json,
+                                             smoke=args.smoke):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"step_dispatch/ERROR,0,{traceback.format_exc()[-300:]!r}",
                   file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -1,8 +1,9 @@
 """Quickstart: the paper's workflow end-to-end on one stencil program.
 
 1. declare stencils in the DSL (schedule-free, close to the math),
-2. build a stencil program and let the toolchain optimize it
-   (extents → strength reduction → transfer-tuned fusion),
+2. build a stencil program and let the automatic pass pipeline optimize it
+   (``opt_level=3``: prune → strength-reduce → cost-model fusion → tuned
+   schedules) — no manual pipeline assembly,
 3. run on the jnp oracle and the Pallas backend, compare,
 4. print the memory-bound performance model report (paper Fig. 10 style).
 
@@ -14,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     StencilProgram, compile_program, format_report, program_bytes,
-    program_report, strength_reduce_program, transfer_tune,
+    program_report,
 )
 from repro.core.stencil import DomainSpec, Field, Param, gtstencil
 
@@ -56,30 +57,30 @@ def build():
 def main():
     p, dom = build()
     print(p)
-    print(f"\nbytes moved (default): {program_bytes(p):,}")
-
-    # the paper's pipeline: strength reduction + transfer tuning
-    strength_reduce_program(p)
-    src, _ = build()
-    transfer_tune(src, p)
-    print(f"bytes moved (optimized): {program_bytes(p):,}")
-    print(p)
+    print(f"\nbytes moved (untransformed): {program_bytes(p):,}")
 
     rng = np.random.default_rng(0)
     fields = {f: jnp.asarray(rng.uniform(0.5, 1.5, dom.padded_shape()),
                              jnp.float32) for f in p.fields}
     params = {"dt": 0.1, "c": 0.2}
     # one entry point, three registered backends (jnp oracle, pallas-tpu,
-    # pallas-gpu) — the hardware-parameterized compilation pipeline
-    out_jnp = compile_program(p, "jnp")(dict(fields), params)
-    out_pl = compile_program(p, "pallas-tpu", interpret=True)(dict(fields), params)
+    # pallas-gpu); opt_level selects the automatic pass ladder — the paper's
+    # whole optimization pipeline with no per-program hand-tuning
+    fn_jnp = compile_program(p, "jnp", opt_level=3)
+    fn_pl = compile_program(p, "pallas-tpu", interpret=True, opt_level=3)
+    print(f"\nopt_level=3 pipeline:\n{fn_jnp.opt_report.summary()}")
+
+    out_jnp = fn_jnp(dict(fields), params)
+    out_pl = fn_pl(dict(fields), params)
     err = np.abs(np.asarray(out_jnp["out"]) - np.asarray(out_pl["out"])).max()
     print(f"\njnp vs pallas-tpu(interpret) max err: {err:.2e}")
 
+    opt = fn_jnp.program  # the graph the ladder actually lowered
+    print(f"bytes moved (optimized): {program_bytes(opt):,}")
     print("\nmemory-bound model report (TPU v5e target):")
-    print(format_report(program_report(p)))
+    print(format_report(program_report(opt)))
     print("\nsame program, P100 GPU target:")
-    print(format_report(program_report(p, hw="p100")))
+    print(format_report(program_report(opt, hw="p100")))
 
 
 if __name__ == "__main__":

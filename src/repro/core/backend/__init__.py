@@ -33,6 +33,7 @@ from .compile import (  # noqa: F401
     compile_program,
     compile_stencil,
     donation_supported,
+    register_cache_clear,
 )
 
 # importing the modules registers the built-in backends

@@ -34,8 +34,10 @@ _CACHE_VERSION = 1
 #: key by tune_stencil / tune_cutouts — bump it whenever ``model_cost``,
 #: ``node_bound_seconds``, schedule enumeration or the fusion transforms
 #: change behavior, so persisted results from the old model are never
-#: served for the new one.
-COST_MODEL_VERSION = 3
+#: served for the new one.  (v4: K-interface fields — per-field extents in
+#: vmem_footprint/node_bytes and whole-K-only schedules for staggered
+#: stencils.)
+COST_MODEL_VERSION = 4
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:
@@ -50,6 +52,7 @@ def stencil_fingerprint(stencil: Stencil) -> str:
         ",".join(stencil.fields),
         ",".join(stencil.outputs),
         ",".join(stencil.params),
+        ",".join(stencil.interface_fields),
         repr(stencil.computations),
     ])
     return hashlib.sha256(payload.encode()).hexdigest()[:32]

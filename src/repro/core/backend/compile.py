@@ -40,6 +40,7 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a circular import
 
 _runner_memo: dict[tuple, Callable] = {}
 _runner_stats = CacheStats()
+_clear_hooks: list[Callable[[], None]] = []
 
 
 def compile_cache_stats() -> dict:
@@ -47,11 +48,20 @@ def compile_cache_stats() -> dict:
     return _runner_stats.as_dict()
 
 
+def register_cache_clear(fn: Callable[[], None]) -> None:
+    """Register an auxiliary in-process compile memo to be dropped by
+    :func:`clear_compile_cache` (e.g. the FV3 remap-runner memo) — one
+    clearing entry point, no stale runners left behind a benchmark reset."""
+    _clear_hooks.append(fn)
+
+
 def clear_compile_cache() -> None:
     """Drop memoized runners AND reset the hit/miss counters — benchmark
     harnesses call this between runs and must not read stale numbers."""
     _runner_memo.clear()
     _runner_stats.reset()
+    for fn in _clear_hooks:
+        fn()
 
 
 def donation_supported() -> bool:
@@ -178,7 +188,7 @@ def compile_program(program: "StencilProgram",
             runners.append((n, r))
 
     fields_decl = program.fields
-    dom_shape = program.dom.padded_shape()
+    dom = program.dom
     inputs, drop_after = _liveness(program, runners)
 
     def run(fields: dict, params: dict | None = None) -> dict:
@@ -193,7 +203,7 @@ def compile_program(program: "StencilProgram",
                 # zero from an input keeps shard_map's manual-axes (VMA)
                 # tracking consistent inside scan carries.
                 decl = fields_decl[name]
-                z = jnp.zeros(dom_shape, decl.dtype)
+                z = jnp.zeros(dom.padded_shape(decl.interface), decl.dtype)
                 if template is not None:
                     z = z + (template.ravel()[0] * 0).astype(decl.dtype)
                 env[name] = z

@@ -114,9 +114,12 @@ def _region_mask(region: Region, dom: DomainSpec, dtype=bool):
     return mj[:, None] & mi[None, :]
 
 
-def _apply_parallel(comp: Computation, env: dict, dom: DomainSpec) -> None:
+def _apply_parallel(comp: Computation, env: dict, dom: DomainSpec,
+                    stencil: Stencil) -> None:
     for st in comp.statements:
-        klo, khi = st.interval.resolve(dom.nk)
+        # the statement's vertical iteration space is its *target's* K
+        # extent: interface targets sweep [0, nk+1), centers [0, nk)
+        klo, khi = st.interval.resolve(stencil.k_extent_of(st.target, dom.nk))
         if khi <= klo:
             continue
         val = _eval(st.value, env, dom, k_slice=(klo, khi))
@@ -130,7 +133,8 @@ def _apply_parallel(comp: Computation, env: dict, dom: DomainSpec) -> None:
         env[st.target] = tgt.at[window].set(val)
 
 
-def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec) -> None:
+def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec,
+                    stencil: Stencil) -> None:
     """fori_loop over k; reads of already-written levels observe updates —
     exact forward/backward solver semantics.
 
@@ -138,8 +142,10 @@ def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec) -> None:
     fused mega-stencils hold many fields, and carrying untouched ones
     through every level is pure copy traffic."""
     written = comp.written()
-    lo = min(st.interval.resolve(dom.nk)[0] for st in comp.statements)
-    hi = max(st.interval.resolve(dom.nk)[1] for st in comp.statements)
+    lo = min(st.interval.resolve(stencil.k_extent_of(st.target, dom.nk))[0]
+             for st in comp.statements)
+    hi = max(st.interval.resolve(stencil.k_extent_of(st.target, dom.nk))[1]
+             for st in comp.statements)
     used = set()
     for st in comp.statements:
         used.add(st.target)
@@ -158,7 +164,8 @@ def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec) -> None:
         local = dict(arrs)
         local.update(scalars)
         for st in comp.statements:
-            sklo, skhi = st.interval.resolve(dom.nk)
+            sklo, skhi = st.interval.resolve(
+                stencil.k_extent_of(st.target, dom.nk))
             tgt = local[st.target]
 
             def read2d(name, off):
@@ -220,12 +227,13 @@ def compile_jnp(stencil: Stencil, dom: DomainSpec, *, dtype=jnp.float32):
         for f in stencil.fields:
             env[f] = fields[f]
         for t in temps:
-            env[t] = jnp.zeros(dom.padded_shape(), dtype=dtype)
+            env[t] = jnp.zeros(dom.padded_shape(stencil.is_interface(t)),
+                               dtype=dtype)
         for comp in stencil.computations:
             if comp.direction is Direction.PARALLEL:
-                _apply_parallel(comp, env, dom)
+                _apply_parallel(comp, env, dom, stencil)
             else:
-                _apply_vertical(comp, env, dom)
+                _apply_vertical(comp, env, dom, stencil)
         return {f: env[f] for f in stencil.written() if f in stencil.fields}
 
     return jax.jit(run)

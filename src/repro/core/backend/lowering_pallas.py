@@ -109,19 +109,36 @@ def _hwindow(dom: DomainSpec, dj: int, di: int):
             slice(h - ei + di, h + dom.ni + ei + di))
 
 
-def _kshift_read(ref, dk: int, nk: int, jsl, isl):
-    """Static K-shifted slice of a (K, J, I) block ref, edge-padded back to
-    nk rows — the one K-offset read idiom shared by the horizontal kernel
-    and the PARALLEL passes of vertical kernels.  Interval restrictions
-    make the padded rows dead."""
-    if dk == 0:
-        return ref[:, jsl, isl]
-    sl = ref[max(0, dk):nk + min(0, dk), jsl, isl]
-    if dk > 0:
-        pad = jnp.broadcast_to(sl[-1:], (dk,) + sl.shape[1:])
-        return jnp.concatenate([sl, pad], axis=0)
-    pad = jnp.broadcast_to(sl[:1], (-dk,) + sl.shape[1:])
-    return jnp.concatenate([pad, sl], axis=0)
+def _k_align(win, dk: int, out_nk: int):
+    """Align a (K_f, J, I) window onto an ``out_nk``-row iteration space
+    shifted by ``dk``: row ``k`` of the result holds ``win[k + dk]``,
+    edge-clamped — the one K-offset read idiom shared by the horizontal
+    kernel and the PARALLEL passes of vertical kernels.  ``K_f`` may differ
+    from ``out_nk`` (K-interface fields carry nk+1 rows, centers nk);
+    interval restrictions make the clamp-padded rows dead."""
+    field_nk = win.shape[0]
+    if dk == 0 and field_nk == out_nk:
+        return win
+    lo = max(0, dk)
+    hi = min(field_nk, out_nk + dk)
+    sl = win[lo:hi]
+    parts = []
+    front = lo - dk  # rows whose k + dk < 0
+    if front > 0:
+        parts.append(jnp.broadcast_to(sl[:1], (front,) + sl.shape[1:]))
+    parts.append(sl)
+    back = out_nk - front - (hi - lo)  # rows whose k + dk >= field_nk
+    if back > 0:
+        parts.append(jnp.broadcast_to(sl[-1:], (back,) + sl.shape[1:]))
+    if len(parts) == 1:
+        return sl
+    return jnp.concatenate(parts, axis=0)
+
+
+def _kshift_read(ref, dk: int, out_nk: int, jsl, isl):
+    """K-shifted slice of a block ref over the (j, i) window (see
+    :func:`_k_align`)."""
+    return _k_align(ref[:, jsl, isl], dk, out_nk)
 
 
 def _region_mask_block(region: Region, dom: DomainSpec):
@@ -199,10 +216,15 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
     fields = list(stencil.fields)
     temps = stencil.temporaries()
     nk = dom.nk
+    ksz = {f: stencil.k_extent_of(f, nk)
+           for f in list(fields) + list(temps)}
     bk = sched.block_k if (sched.block_k and sched.k_as_grid) else nk
     if any(st.value.accesses() and any(a.offset[2] != 0 for a in st.value.accesses())
            for st in statements):
         bk = nk  # K offsets require whole-column blocks
+    if stencil.has_interface_fields():
+        bk = nk  # interface and center fields never co-tile in K
+    whole_k = bk == nk
 
     def kernel(*refs):
         n_in = len(fields) + len(param_names)
@@ -213,41 +235,56 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
         for w in written:
             out_refs[w][...] = in_refs[w][...]
         env: dict[str, Any] = {}
-        pid = pl.program_id(0) if bk != nk else 0
+        pid = pl.program_id(0) if not whole_k else 0
         k0 = pid * bk
 
-        def read(name, off):
-            di, dj, dk = off
-            jsl, isl = _hwindow(dom, dj, di)
-            ref = out_refs.get(name, in_refs.get(name))
-            if name in env and (di, dj, dk) == (0, 0, 0):
-                return env[name]
-            if name in env and (ref is None or (di, dj) != (0, 0)):
-                # kernel-local temporary at an offset, or a horizontal offset
-                # of freshly-written values (the ref's halo ring still holds
-                # input data) — unrepresentable in one kernel.
-                return None
-            # K-offset reads require bk == nk (enforced above).  For fields
-            # written earlier in a fused kernel this reads the ref, which
-            # carries updated values in the window and the input copy
-            # elsewhere — exact sequential-statement semantics.
-            return _kshift_read(ref, dk, nk, jsl, isl)
+        def make_read(rows):
+            # ``rows`` is the current statement's iteration-row count: its
+            # target's whole K extent (interface nk+1 / center nk) under
+            # whole-K blocks, else the block size
+            def read(name, off):
+                di, dj, dk = off
+                jsl, isl = _hwindow(dom, dj, di)
+                ref = out_refs.get(name, in_refs.get(name))
+                if name in env and (di, dj) == (0, 0):
+                    if dk == 0 and env[name].shape[0] == rows:
+                        return env[name]
+                    if ref is None:
+                        # kernel-local temporary on a staggered extent or at
+                        # a K offset: realign its rows onto this statement's
+                        # iteration space (requires whole-K blocks)
+                        return _k_align(env[name], dk, rows)
+                if name in env and (ref is None or (di, dj) != (0, 0)):
+                    # temporary at a horizontal offset, or a horizontal
+                    # offset of freshly-written values (the ref's halo ring
+                    # still holds input data) — unrepresentable in one kernel.
+                    return None
+                # K-offset / staggered reads require whole-K blocks (enforced
+                # above).  For fields written earlier in a fused kernel this
+                # reads the ref, which carries updated values in the window
+                # and the input copy elsewhere — exact sequential-statement
+                # semantics.
+                return _kshift_read(ref, dk, rows, jsl, isl)
 
-        def read_resolved(name, off):
-            out = read(name, off)
-            if out is None:
-                raise NotImplementedError(
-                    f"offset read {off} of in-kernel temporary {name!r}; "
-                    "allocate it as a field or fuse with OTF instead")
-            return out
+            def read_resolved(name, off):
+                out = read(name, off)
+                if out is None:
+                    raise NotImplementedError(
+                        f"offset read {off} of in-kernel temporary {name!r}; "
+                        "allocate it as a field or fuse with OTF instead")
+                return out
+
+            return read_resolved
 
         ei, ej = dom.extend
-        blk_k = bk
-        kk = (jax.lax.broadcasted_iota(
-            jnp.int32, (blk_k, dom.nj + 2 * ej, dom.ni + 2 * ei), 0) + k0)
+        nj_w, ni_w = dom.nj + 2 * ej, dom.ni + 2 * ei
         for st in statements:
-            val = _eval_block(st.value, read_resolved, params)
-            klo, khi = st.interval.resolve(nk)
+            tgt_nk = ksz.get(st.target, nk)
+            rows = tgt_nk if whole_k else bk
+            kk = (jax.lax.broadcasted_iota(
+                jnp.int32, (rows, nj_w, ni_w), 0) + k0)
+            val = _eval_block(st.value, make_read(rows), params)
+            klo, khi = st.interval.resolve(tgt_nk)
             jsl, isl = _hwindow(dom, 0, 0)
             tgt_ref = out_refs.get(st.target)
             if tgt_ref is not None:
@@ -260,11 +297,7 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
             val = jnp.broadcast_to(val, kk.shape).astype(
                 cur.dtype if hasattr(cur, "dtype") else jnp.float32)
             mask = (kk >= klo) & (kk < khi)
-            if st.region is not None and sched.region_strategy == "predicated":
-                mask = mask & _region_mask_block(st.region, dom)[None]
-            elif st.region is not None:
-                # split strategy: narrow writes to the region bbox statically
-                rilo, rihi, rjlo, rjhi = st.region.resolve(dom.ni, dom.nj)
+            if st.region is not None:
                 mask = mask & _region_mask_block(st.region, dom)[None]
             new = jnp.where(mask, val, cur)
             if tgt_ref is not None:
@@ -274,11 +307,13 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
     njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
     grid = (nk // bk,)
-    in_specs = ([pl.BlockSpec((bk, njp, nip), lambda k: (k, 0, 0))
-                 for _ in fields] +
+
+    def block(f_rows):
+        return pl.BlockSpec((f_rows, njp, nip), lambda k: (k, 0, 0))
+
+    in_specs = ([block(ksz[f] if whole_k else bk) for f in fields] +
                 [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
-    out_specs = [pl.BlockSpec((bk, njp, nip), lambda k: (k, 0, 0))
-                 for _ in written]
+    out_specs = [block(ksz[w] if whole_k else bk) for w in written]
     return kernel, grid, in_specs, out_specs, written, bk
 
 
@@ -293,6 +328,8 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
     fields = list(stencil.fields)
     temps = stencil.temporaries()
     nk = dom.nk
+    ksz = {f: stencil.k_extent_of(f, nk)
+           for f in list(fields) + list(temps)}
 
     # which (field, k-offset) pairs are loop-carried reads of written values
     carried: set[str] = set()
@@ -329,14 +366,17 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
             if comp.direction is Direction.PARALLEL:
                 # elementwise pass inside a solver stencil (fused subgraphs
                 # mix PARALLEL and solver computations in one mega-kernel)
-                kk = jax.lax.broadcasted_iota(jnp.int32, (nk,) + shape2d, 0)
                 for st in comp.statements:
-                    def read_par(name, off):
+                    rows = ksz.get(st.target, nk)
+                    kk = jax.lax.broadcasted_iota(
+                        jnp.int32, (rows,) + shape2d, 0)
+
+                    def read_par(name, off, rows=rows):
                         di, dj, dk = off
                         js, is_ = _hwindow(dom, dj, di)
-                        return _kshift_read(ref_of(name), dk, nk, js, is_)
+                        return _kshift_read(ref_of(name), dk, rows, js, is_)
                     val = _eval_block(st.value, read_par, params)
-                    klo, khi = st.interval.resolve(nk)
+                    klo, khi = st.interval.resolve(rows)
                     tgt = ref_of(st.target)
                     cur = tgt[:, jsl, isl]
                     val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
@@ -348,8 +388,10 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
             forward = comp.direction is Direction.FORWARD
             prev = -1 if forward else 1
-            lo = min(st.interval.resolve(nk)[0] for st in comp.statements)
-            hi = max(st.interval.resolve(nk)[1] for st in comp.statements)
+            lo = min(st.interval.resolve(ksz.get(st.target, nk))[0]
+                     for st in comp.statements)
+            hi = max(st.interval.resolve(ksz.get(st.target, nk))[1]
+                     for st in comp.statements)
             carry_names = sorted(carried & set(comp.written()))
 
             def init_carry():
@@ -373,7 +415,7 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
                 new_carry = dict(carry)
                 for st in comp.statements:
-                    sklo, skhi = st.interval.resolve(nk)
+                    sklo, skhi = st.interval.resolve(ksz.get(st.target, nk))
                     val = _eval_block(st.value, read_lvl, params)
                     tgt = ref_of(st.target)
                     cur = tgt[k, jsl, isl]
@@ -393,12 +435,15 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
     njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
     grid = (1,)
-    full = pl.BlockSpec((nk, njp, nip), lambda _: (0, 0, 0))
-    in_specs = ([full for _ in fields] +
+
+    def full(f_rows):
+        return pl.BlockSpec((f_rows, njp, nip), lambda _: (0, 0, 0))
+
+    in_specs = ([full(ksz[f]) for f in fields] +
                 [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
     # stencil temporaries live in VMEM scratch — fused subgraphs keep their
     # internalized transients out of HBM entirely (paper §VI-A)
-    out_specs = [full for _ in written]
+    out_specs = [full(ksz[w]) for w in written]
     return kernel, grid, in_specs, out_specs, written, temps
 
 
@@ -420,7 +465,9 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
     """
     sched = schedule or default_schedule(stencil, (dom.nk, dom.nj, dom.ni))
     param_names = list(stencil.params)
-    shape = dom.padded_shape()
+
+    def shape_of(name):
+        return dom.padded_shape(stencil.is_interface(name))
 
     if stencil.is_vertical_solver():
         kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(
@@ -430,22 +477,22 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
         # the same positions temporaries-as-outputs occupy, so the kernel
         # body is agnostic to which mechanism backs them
         if scratch_temps:
-            scratch = [pltpu.VMEM(shape, dtype) for _ in temps]
+            scratch = [pltpu.VMEM(shape_of(t), dtype) for t in temps]
         else:
             scratch = []
-            full = pl.BlockSpec(shape, lambda _: (0, 0, 0))
-            out_specs = out_specs + [full for _ in temps]
+            out_specs = out_specs + [
+                pl.BlockSpec(shape_of(t), lambda _: (0, 0, 0)) for t in temps]
 
         def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
             params = dict(params or {})
             args = ([jnp.asarray(fields[f]) for f in stencil.fields] +
                     [jnp.asarray(params[p], dtype=dtype).reshape(1)
                      for p in param_names])
-            out_shapes = [jax.ShapeDtypeStruct(shape, args[0].dtype)
-                          for _ in written]
+            out_shapes = [jax.ShapeDtypeStruct(shape_of(w), args[0].dtype)
+                          for w in written]
             if not scratch_temps:
-                out_shapes += [jax.ShapeDtypeStruct(shape, dtype)
-                               for _ in temps]
+                out_shapes += [jax.ShapeDtypeStruct(shape_of(t), dtype)
+                               for t in temps]
             outs = pl.pallas_call(
                 kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
                 out_shape=out_shapes, scratch_shapes=scratch,
@@ -479,7 +526,8 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
             args = ([cur[f] for f in stencil.fields] +
                     [jnp.asarray(params[p], dtype=dtype).reshape(1)
                      for p in param_names])
-            out_shapes = [jax.ShapeDtypeStruct(shape, cur[w].dtype) for w in written]
+            out_shapes = [jax.ShapeDtypeStruct(shape_of(w), cur[w].dtype)
+                          for w in written]
             outs = pl.pallas_call(
                 kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
                 out_shape=out_shapes, interpret=interpret,

@@ -55,6 +55,7 @@ def rename_stencil(st: Stencil, field_map: Mapping[str, str],
         fields=tuple(mapname(f) for f in st.fields),
         outputs=tuple(mapname(o) for o in st.outputs),
         params=tuple(param_map.get(p, p) for p in st.params),
+        interface_fields=tuple(mapname(f) for f in st.interface_fields),
     )
 
 
@@ -63,6 +64,7 @@ class FieldDecl:
     name: str
     dtype: Any = jnp.float32
     transient: bool = False  # removable container (paper Fig. 4)
+    interface: bool = False  # K-interface field: nk+1 allocated levels
 
 
 @dataclasses.dataclass
@@ -104,8 +106,9 @@ class StencilProgram:
         self._counter = 0
 
     # -- construction --------------------------------------------------------
-    def declare(self, name: str, dtype=jnp.float32, transient: bool = False) -> str:
-        self.fields[name] = FieldDecl(name, dtype, transient)
+    def declare(self, name: str, dtype=jnp.float32, transient: bool = False,
+                interface: bool = False) -> str:
+        self.fields[name] = FieldDecl(name, dtype, transient, interface)
         return name
 
     def new_state(self, name: str | None = None) -> State:
@@ -121,9 +124,16 @@ class StencilProgram:
         self._counter += 1
         renamed = rename_stencil(stencil, bindings, params,
                                  temp_prefix=f"__t{self._counter}_")
+        iface = set(renamed.interface_fields)
         for f in renamed.fields:
             if f not in self.fields:
                 raise KeyError(f"field {f!r} not declared in program {self.name}")
+            if self.fields[f].interface != (f in iface):
+                want = "interface" if f in iface else "center"
+                raise ValueError(
+                    f"field {f!r}: stencil {stencil.name!r} expects a {want} "
+                    f"field but program {self.name!r} declares the opposite "
+                    "K staggering")
         for p in renamed.params:
             if p not in self.params:
                 self.params.append(p)

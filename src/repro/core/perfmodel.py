@@ -27,16 +27,18 @@ def _dtype_bytes(dtype) -> int:
 
 
 def node_bytes(program: StencilProgram, node: Node) -> int:
-    """Unique bytes moved by a node: every accessed field element once."""
+    """Unique bytes moved by a node: every accessed field element once
+    (K-interface fields carry nk+1 levels)."""
     dom = program.node_dom(node)
     ei, ej = node.extend
-    vol = dom.nk * (dom.nj + 2 * ej) * (dom.ni + 2 * ei)
+    plane = (dom.nj + 2 * ej) * (dom.ni + 2 * ei)
     total = 0
     touched = list(dict.fromkeys(node.stencil.read_fields() + node.writes()))
     for f in touched:
         decl = program.fields.get(f)
         nbytes = _dtype_bytes(decl.dtype if decl else "float32")
         mult = 2 if (f in node.stencil.read_fields() and f in node.writes()) else 1
+        vol = node.stencil.k_extent_of(f, dom.nk) * plane
         total += vol * nbytes * mult
     # temporaries live in VMEM after fusion → no HBM traffic
     return total

@@ -22,7 +22,7 @@ from .ir import (  # noqa: F401
     Where,
 )
 from .domain import DomainSpec  # noqa: F401
-from .frontend import Field, Param, gtstencil  # noqa: F401
+from .frontend import Field, Param, gtstencil, interface  # noqa: F401
 from .schedule import (  # noqa: F401
     Schedule,
     default_schedule,

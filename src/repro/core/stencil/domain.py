@@ -28,8 +28,11 @@ class DomainSpec:
         return (slice(None), slice(h - ej, h + self.nj + ej),
                 slice(h - ei, h + self.ni + ei))
 
-    def padded_shape(self):
-        return (self.nk, self.nj + 2 * self.halo, self.ni + 2 * self.halo)
+    def padded_shape(self, interface: bool = False):
+        """Allocated array shape; K-interface fields carry ``nk + 1`` levels
+        (vertical staggering), centers exactly ``nk``."""
+        nk = self.nk + 1 if interface else self.nk
+        return (nk, self.nj + 2 * self.halo, self.ni + 2 * self.halo)
 
     def shape(self) -> tuple[int, int, int]:
         """(nk, nj, ni) — the interior shape schedule enumeration works on."""

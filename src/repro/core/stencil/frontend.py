@@ -51,8 +51,18 @@ from .ir import (
 )
 
 # Sentinels usable in signatures and bodies -------------------------------
-Field = "Field"
+class _FieldSentinel(str):
+    """``Field`` annotation sentinel; ``Field[interface]`` marks a
+    K-interface (nk+1 level) field — vertical staggering à la GT4Py/Devito
+    staggered dimensions."""
+
+    def __getitem__(self, item):
+        return f"Field[{item}]"
+
+
+Field = _FieldSentinel("Field")
 Param = "Param"
+interface = "interface"
 
 PARALLEL = ir.PARALLEL
 FORWARD = ir.FORWARD
@@ -315,8 +325,22 @@ def gtstencil(fn: Callable | None = None, *, name: str | None = None):
         assert isinstance(fdef, ast.FunctionDef)
         fields: list[str] = []
         params: list[str] = []
+        iface: list[str] = []
         for a in fdef.args.args:
             ann = a.annotation
+            if isinstance(ann, ast.Subscript):
+                # Field[interface] — a K-interface (nk+1 level) field
+                base = ann.value.id if isinstance(ann.value, ast.Name) else None
+                sub = ann.slice
+                sub_id = sub.id if isinstance(sub, ast.Name) else (
+                    sub.value if isinstance(sub, ast.Constant) else None)
+                if base != "Field" or sub_id != "interface":
+                    raise StencilSyntaxError(
+                        f"{fdef.name}: unsupported annotation on {a.arg!r}; "
+                        "only Field[interface] is subscriptable")
+                fields.append(a.arg)
+                iface.append(a.arg)
+                continue
             ann_id = ann.id if isinstance(ann, ast.Name) else (
                 ann.value if isinstance(ann, ast.Constant) else None)
             if ann_id in ("Field", None):
@@ -348,6 +372,7 @@ def gtstencil(fn: Callable | None = None, *, name: str | None = None):
             fields=tuple(fields),
             outputs=tuple(written),
             params=tuple(params),
+            interface_fields=tuple(iface),
         )
 
     if fn is not None:

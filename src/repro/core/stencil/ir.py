@@ -418,13 +418,22 @@ class Computation:
 
 @dataclasses.dataclass
 class Stencil:
-    """A named stencil function: computations + field/param signature."""
+    """A named stencil function: computations + field/param signature.
+
+    ``interface_fields`` names the K-interface (vertically staggered)
+    quantities among ``fields`` *and* temporaries: they carry ``nk + 1``
+    levels instead of ``nk``.  Statements targeting an interface field
+    resolve their vertical interval against ``nk + 1`` (so
+    ``interval(1, None)`` covers levels ``1..nk`` inclusive), exactly the
+    GT4Py staggered-dimension semantics the vertical remap needs.
+    """
 
     name: str
     computations: tuple[Computation, ...]
     fields: tuple[str, ...]  # input and inout fields, in signature order
     outputs: tuple[str, ...]  # subset of fields written (or new temporaries)
     params: tuple[str, ...] = ()
+    interface_fields: tuple[str, ...] = ()
 
     # -- analysis ------------------------------------------------------------
     def written(self) -> list[str]:
@@ -510,6 +519,17 @@ class Stencil:
             if e[4] != 0 or e[5] != 0:
                 return True
         return False
+
+    # -- vertical staggering --------------------------------------------------
+    def is_interface(self, name: str) -> bool:
+        return name in self.interface_fields
+
+    def k_extent_of(self, name: str, nk: int) -> int:
+        """Allocated K levels of ``name`` on an nk-level domain."""
+        return nk + 1 if name in self.interface_fields else nk
+
+    def has_interface_fields(self) -> bool:
+        return bool(self.interface_fields)
 
     def is_vertical_solver(self) -> bool:
         return any(c.direction is not Direction.PARALLEL for c in self.computations)

@@ -63,13 +63,20 @@ def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
     """Bytes of fast on-chip memory one kernel invocation touches under this
     schedule (VMEM block on TPU; shared-memory tile on GPU).  The byte
     count itself is hardware-independent; callers compare it against
-    ``hw.vmem_bytes``."""
+    ``hw.vmem_bytes``.  K-interface buffers carry one extra level
+    (they only ever appear in whole-K blocks — interface and center fields
+    never co-tile in K)."""
     nk, nj, ni = dom_shape
     bi = sched.block_i or ni
     bj = sched.block_j or nj
-    bk = (sched.block_k or nk) if (sched.k_as_grid and not stencil.is_vertical_solver()) else nk
-    n_bufs = len(stencil.fields) + len(stencil.temporaries())
-    return n_bufs * bi * bj * bk * dtype_bytes
+    whole_k = (not sched.k_as_grid or stencil.is_vertical_solver()
+               or stencil.has_interface_fields())
+    bk = nk if whole_k else (sched.block_k or nk)
+    total = 0
+    for name in tuple(stencil.fields) + tuple(stencil.temporaries()):
+        k_size = bk + 1 if (whole_k and stencil.is_interface(name)) else bk
+        total += bi * bj * k_size * dtype_bytes
+    return total
 
 
 def _feasible_tpu(stencil: Stencil, dom_shape, dtype_bytes: int,
@@ -79,7 +86,11 @@ def _feasible_tpu(stencil: Stencil, dom_shape, dtype_bytes: int,
     has_regions = any(s.region is not None
                       for c in stencil.computations for s in c.statements)
     lane, sublane = hw.lane, hw.sublane
-    k_opts = [1, 4, 8, 16, 0] if not vertical else [0]
+    # interface fields (nk+1 levels) never co-tile with centers in K: any
+    # K slab of mixed extents would misalign block boundaries, so interface
+    # stencils only get whole-column blocks (same rule as K offsets below)
+    k_opts = ([0] if (vertical or stencil.has_interface_fields())
+              else [1, 4, 8, 16, 0])
     i_opts = [0] if ni <= 2 * lane else [0, lane, 2 * lane]
     j_opts = [0, sublane, 4 * sublane, 16 * sublane]
     region_opts = ["predicated", "split"] if has_regions else ["predicated"]
@@ -112,9 +123,9 @@ def _feasible_gpu(stencil: Stencil, dom_shape, dtype_bytes: int,
     warp = hw.lane
     i_opts = [w for w in (warp, 2 * warp, 4 * warp) if w <= ni] or [ni]
     j_opts = [1, 2, 4, 8]
-    # K-offset stencils need whole-K blocks (same rule as TPU); otherwise
-    # small K slabs map to the thread-block z dimension
-    if vertical or stencil.has_k_offsets():
+    # K-offset and interface stencils need whole-K blocks (same rule as
+    # TPU); otherwise small K slabs map to the thread-block z dimension
+    if vertical or stencil.has_k_offsets() or stencil.has_interface_fields():
         k_opts = [0]
     else:
         k_opts = bk_dedup([1, 2, 4], nk)
@@ -164,19 +175,20 @@ def default_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
     so defaulting to them would contradict ``feasible_schedules``)."""
     hw = resolve_hardware(hw)
     vertical = stencil.is_vertical_solver()
+    whole_k = vertical or stencil.has_interface_fields()
     if hw.kind == "gpu":
         nk, nj, ni = dom_shape
         bi = min(ni, 4 * hw.lane)
         bj = 8
         while (vmem_footprint(stencil,
                               Schedule(block_i=bi, block_j=bj,
-                                       block_k=0 if vertical else 1,
+                                       block_k=0 if whole_k else 1,
                                        k_as_grid=not vertical),
                               dom_shape, dtype_bytes) > hw.vmem_bytes
                and bj > 1):
             bj //= 2
         return Schedule(block_i=bi, block_j=bj,
-                        block_k=0 if vertical else 1,
+                        block_k=0 if whole_k else 1,
                         k_as_grid=not vertical,
                         carry_storage="vmem", region_strategy="predicated")
     return Schedule(block_i=0, block_j=0, block_k=0,
@@ -200,16 +212,22 @@ def heuristic_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
     if stencil.is_vertical_solver():
         return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=False,
                         carry_storage="vreg", region_strategy="predicated")
+    # whole-column blocks only for K-offset / interface stencils (interface
+    # and center fields never co-tile in K) — decided BEFORE the GPU branch
+    # so the fusion cost model never prices these stencils on a K slab the
+    # lowering would silently refuse
+    whole_k = stencil.has_k_offsets() or stencil.has_interface_fields()
     if hw.kind == "gpu":
+        bk = 0 if whole_k else 1
         bi = min(ni, 4 * hw.lane)
         bj = 4
         while (vmem_footprint(stencil, Schedule(block_i=bi, block_j=bj,
-                                                block_k=1), dom_shape,
+                                                block_k=bk), dom_shape,
                               dtype_bytes) > hw.vmem_bytes and bj > 1):
             bj //= 2
-        return Schedule(block_i=bi, block_j=bj, block_k=1, k_as_grid=True,
+        return Schedule(block_i=bi, block_j=bj, block_k=bk, k_as_grid=True,
                         carry_storage="vreg", region_strategy="predicated")
-    if stencil.has_k_offsets():
+    if whole_k:
         return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=True,
                         carry_storage="vreg", region_strategy="predicated")
     bk = 1

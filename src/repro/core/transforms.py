@@ -94,6 +94,13 @@ def can_otf_fuse(producer: Node, consumer: Node) -> bool:
     shared = set(producer.writes()) & set(consumer.reads())
     if not shared:
         return False
+    # interface (nk+1) and center (nk) fields never co-tile in K: inlining
+    # an interface-extent definition into a center-extent statement (or vice
+    # versa) would re-evaluate it over the wrong vertical iteration space
+    if shared & set(producer.stencil.interface_fields):
+        return False
+    if shared & set(consumer.stencil.interface_fields):
+        return False
     # a consumer that overwrites a shared field would have its later reads
     # of that field substituted with the *producer's* stale value instead of
     # its own update (f = f*2; h = f+1 must see the doubled f)
@@ -148,8 +155,11 @@ def otf_fuse(program: StencilProgram, state: State, producer: Node,
     union = tuple(dict.fromkeys(
         tuple(consumer.stencil.fields) + tuple(producer.stencil.fields)))
     params = tuple(dict.fromkeys(consumer.stencil.params + producer.stencil.params))
+    iface = tuple(dict.fromkeys(consumer.stencil.interface_fields
+                                + producer.stencil.interface_fields))
     new_stencil = dataclasses.replace(
         consumer.stencil, computations=new_comps, fields=union, params=params,
+        interface_fields=iface,
         name=f"{producer.stencil.name}+{consumer.stencil.name}")
     still = set(new_stencil.read_fields()) | \
         {w for w in new_stencil.written() if w in union}
@@ -214,6 +224,7 @@ def subgraph_fuse(program: StencilProgram, state: State,
     comps: list[Computation] = []
     fields: list[str] = []
     params: list[str] = []
+    iface: list[str] = []
     for n in nodes:
         comps.extend(n.stencil.computations)
         for f in n.stencil.fields:
@@ -222,11 +233,15 @@ def subgraph_fuse(program: StencilProgram, state: State,
         for p in n.stencil.params:
             if p not in params:
                 params.append(p)
+        for f in n.stencil.interface_fields:
+            if f not in iface:
+                iface.append(f)
     name = "&".join(dict.fromkeys(n.stencil.name for n in nodes))
     fused_st = Stencil(name=name, computations=tuple(comps),
                        fields=tuple(fields),
                        outputs=tuple(f for f in fields),
-                       params=tuple(params))
+                       params=tuple(params),
+                       interface_fields=tuple(iface))
 
     # internal transients: written by the fused stencil and read nowhere else
     sidx = program.states.index(state)

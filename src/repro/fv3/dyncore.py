@@ -12,9 +12,14 @@ Two execution modes share all stencil programs:
     ppermute halo updater) — the production path; the halo collectives sit
     off the interior critical path so XLA's scheduler overlaps them.
 
-Vertical remapping is implemented in plain JAX (a documented concession —
-the data-dependent level search is the kind of code the paper routes through
-its callback/orchestration escape hatch rather than the stencil DSL).
+Vertical remapping compiles through the stencil toolchain like everything
+else: the cumulative interface pressures and mass integrals are FORWARD
+stencils on K-interface fields, the data-dependent level search of the old
+hand-written ``jnp.interp`` path is unrolled into a data-oblivious
+piecewise-linear interpolation stencil, and the remapped means come from
+exact interface differencing (mass-conserving by construction).  Both step
+factories roll their sub-stepping loops into ``jax.lax.scan`` inside one
+jitted step — a single dispatch per physics step.
 """
 
 from __future__ import annotations
@@ -27,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StencilProgram, compile_program
+from repro.core import StencilProgram, compile_program, donation_supported
+from repro.core.backend import register_cache_clear
 from repro.core.stencil import DomainSpec
 from . import stencils as S
 from .halo import exchange_reference, make_halo_exchanger
@@ -170,18 +176,26 @@ def default_params(cfg: FV3Config) -> dict:
     return {
         "dt": cfg.dt, "dt2": 0.5 * cfg.dt, "smag_dt": cfg.smag_coeff * cfg.dt,
         "dtdx": dtdx, "dtdy": dtdx, "rdx": 1.0, "rdy": 1.0,
-        "ptop": cfg.ptop, "beta": cfg.beta,
+        "ptop": cfg.ptop, "beta": cfg.beta, "rk": 1.0 / cfg.nk,
     }
 
 
 # ---------------------------------------------------------------------------
-# Vertical remapping (plain JAX; paper's green hexagon)
+# Vertical remapping (paper Fig. 2 orange region) — DSL stencil program
 # ---------------------------------------------------------------------------
 
 
-def vertical_remap(cfg: FV3Config, delp: jax.Array, fields: dict) -> tuple:
-    """First-order conservative remap from the deformed Lagrangian levels
-    back to reference sigma levels.  delp/fields: (nk, nyp, nxp)."""
+def vertical_remap_reference(cfg: FV3Config, delp: jax.Array,
+                             fields: dict) -> tuple:
+    """The pre-DSL hand-written remap, kept as the regression oracle.
+
+    Known bug (why the DSL path replaced it): the ``maximum(delp_ref,
+    1e-10)`` denominator floor silently violates mass conservation whenever
+    a reference layer is thinner than the floor — ``sum(q * delp)`` is no
+    longer preserved.  The stencil path divides by the exact interface
+    difference instead.  It also bypasses the pass manager, the Pallas
+    backends and the tuning cache entirely.
+    """
     nk = cfg.nk
     ptop = cfg.ptop
     pe = ptop + jnp.concatenate(
@@ -207,6 +221,89 @@ def vertical_remap(cfg: FV3Config, delp: jax.Array, fields: dict) -> tuple:
     return delp_ref, out
 
 
+def build_remap_program(cfg: FV3Config, dom: DomainSpec,
+                        fields: tuple[str, ...] | None = None) -> StencilProgram:
+    """First-order conservative Lagrangian→reference remap as a stencil
+    program on K-interface fields: FORWARD cumulative builds of ``pe`` /
+    ``pe_ref`` and the per-field mass integrals, a data-oblivious
+    piecewise-linear interpolation onto the reference interfaces, and exact
+    interface differencing for the remapped means.  Compiling through
+    ``compile_program`` puts the remap under the pass manager, the Pallas
+    lowerings and the persistent tuning cache like every other motif.
+    """
+    if fields is None:
+        fields = ("pt", "w", "u", "v", *cfg.tracers)
+    p = StencilProgram("vertical_remap", dom)
+    p.declare("delp")
+    p.declare("delp_out")
+    for t in ("cum", "total"):
+        p.declare(t, transient=True)
+    for t in ("pe", "pe_ref"):
+        p.declare(t, transient=True, interface=True)
+    p.add(S.lagrangian_pe, {"delp": "delp", "pe": "pe"})
+    p.add(S.column_total, {"delp": "delp", "cum": "cum", "total": "total"})
+    p.add(S.reference_pe, {"total": "total", "pe_ref": "pe_ref"})
+    p.add(S.remap_delp, {"pe_ref": "pe_ref", "delp_out": "delp_out"})
+    interp = S.interface_interp_stencil(cfg.nk)
+    for q in fields:
+        p.declare(q)
+        p.declare(f"{q}_out")
+        p.declare(f"{q}_fm", transient=True, interface=True)
+        p.declare(f"{q}_fi", transient=True, interface=True)
+        p.add(S.cumsum_mass, {"q": q, "delp": "delp", "fm": f"{q}_fm"})
+        p.add(interp, {"fm": f"{q}_fm", "pe": "pe", "pe_ref": "pe_ref",
+                       "fi": f"{q}_fi"})
+        p.add(S.remap_field, {"fi": f"{q}_fi", "pe_ref": "pe_ref",
+                              "q_out": f"{q}_out"})
+    p.propagate_extents()
+    return p
+
+
+def make_vertical_remap(cfg: FV3Config, dom: DomainSpec,
+                        fields: tuple[str, ...], *, backend: str = "jnp",
+                        hardware=None, opt_level: int = 0):
+    """Compile the remap program; returns ``remap(delp, field_dict, params)
+    -> (delp_ref, remapped_dict)`` plus the compiled runner (for
+    introspection) as ``remap.run``."""
+    prog = build_remap_program(cfg, dom, fields)
+    run = compile_program(prog, backend, hardware=hardware, interpret=True,
+                          opt_level=opt_level)
+
+    def remap(delp, field_dict, params):
+        ins = {"delp": delp, **{q: field_dict[q] for q in fields}}
+        out = run(ins, params)
+        return out["delp_out"], {q: out[f"{q}_out"] for q in fields}
+
+    remap.run = run
+    remap.fields = tuple(fields)
+    return remap
+
+
+_REMAP_MEMO: dict[tuple, Callable] = {}
+# drop memoized remap runners together with the backend compile memo, so a
+# benchmark-harness clear_compile_cache() leaves no stale runners behind
+register_cache_clear(_REMAP_MEMO.clear)
+
+
+def vertical_remap(cfg: FV3Config, delp: jax.Array, fields: dict) -> tuple:
+    """First-order conservative remap from the deformed Lagrangian levels
+    back to reference sigma levels; delp/fields: (nk, nyp, nxp).
+
+    Thin convenience wrapper over :func:`make_vertical_remap` — the remap is
+    a compiled stencil program (jnp backend), memoized per (config, field
+    set, shape).  Step factories build their own runner once instead.
+    """
+    names = tuple(fields)
+    nyp = delp.shape[1] - 2 * cfg.halo
+    nxp = delp.shape[2] - 2 * cfg.halo
+    key = (cfg.nk, cfg.halo, nyp, nxp, names)
+    fn = _REMAP_MEMO.get(key)
+    if fn is None:
+        dom = DomainSpec(ni=nxp, nj=nyp, nk=cfg.nk, halo=cfg.halo)
+        fn = _REMAP_MEMO[key] = make_vertical_remap(cfg, dom, names)
+    return fn(delp, fields, {"ptop": cfg.ptop, "rk": 1.0 / cfg.nk})
+
+
 # ---------------------------------------------------------------------------
 # Step functions
 # ---------------------------------------------------------------------------
@@ -229,14 +326,16 @@ def _resolve_opt_level(optimize: bool, opt_level: int | None) -> int:
 
 def _build_programs(cfg: FV3Config, dom: DomainSpec):
     return (build_csw_program(cfg, dom), build_dsw_program(cfg, dom),
-            build_tracer_program(cfg, dom))
+            build_tracer_program(cfg, dom),
+            build_remap_program(cfg, dom))
 
 
 def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
                    opt_level: int, hardware=None):
-    """Build the three stencil programs and compile each through the
-    automatic optimization ladder (the paper's opt pipeline applies to the
-    whole dycore with no per-program hand-tuning)."""
+    """Build the four stencil programs (acoustic c_sw / d_sw, tracer
+    transport, vertical remap) and compile each through the automatic
+    optimization ladder (the paper's opt pipeline applies to the whole
+    dycore — remap included — with no per-program hand-tuning)."""
     progs = _build_programs(cfg, dom)
     runners = tuple(
         compile_program(p, backend, hardware=hardware, interpret=True,
@@ -245,16 +344,23 @@ def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
     return progs, runners
 
 
-def _csw_inputs(src):
-    """c_sw input dict from a state dict (cosa/sina: fixed synthetic grid
-    metric terms shared by every execution path)."""
-    ones = jnp.ones_like(src["delp"])
+def _metric_terms(cfg: FV3Config, shape, dtype=jnp.float32) -> dict:
+    """cosa/sina: fixed synthetic grid metric terms shared by every
+    execution path — built ONCE per step closure so the scan body never
+    re-materializes constants (the old per-substep ``ones_like`` rebuild)."""
+    return {"cosa": jnp.full(shape, 0.2, dtype),
+            "sina": jnp.full(shape, 0.8, dtype)}
+
+
+def _csw_inputs(src, metrics):
+    """c_sw input dict from a state dict + hoisted metric constants."""
     return {"u": src["u"], "v": src["v"], "delp": src["delp"],
             "pt": src["pt"], "w": src["w"],
-            "cosa": 0.2 * ones, "sina": 0.8 * ones}
+            "cosa": metrics["cosa"], "sina": metrics["sina"]}
 
 
-def _acoustic_iteration(cfg, runners, params, halo_fn, state, overlap=None):
+def _acoustic_iteration(cfg, runners, params, halo_fn, state, metrics,
+                        overlap=None):
     """One acoustic substep on local (or per-tile) padded arrays.
 
     Structure matches the paper's blue region (Fig. 2): c_sw-lite +
@@ -270,7 +376,7 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state, overlap=None):
         ov_csw, ov_dsw, _ = overlap
         st = dict(state)
         ex = halo_fn(st, list(STATE_FIELDS))          # ppermute rounds
-        out = ov_csw(_csw_inputs(st), _csw_inputs(ex),
+        out = ov_csw(_csw_inputs(st, metrics), _csw_inputs(ex, metrics),
                      params)                          # interior ∥ exchange
         st = ex
         st["w"] = out["w"]
@@ -283,10 +389,10 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state, overlap=None):
         st["delp"], st["pt"] = out2["delp_out"], out2["pt_out"]
         return st
 
-    run_csw, run_dsw, _ = runners
+    run_csw, run_dsw = runners[0], runners[1]
     st = dict(state)
     st = halo_fn(st, list(STATE_FIELDS))
-    out = run_csw(_csw_inputs(st), params)
+    out = run_csw(_csw_inputs(st, metrics), params)
     st["w"] = out["w"]
     # d_sw's Smagorinsky reads delpc at extent (1,1) — one scalar exchange
     delpc = halo_fn({**st, "delpc": out["delpc"]}, ["delpc"])["delpc"]
@@ -298,12 +404,37 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state, overlap=None):
     return st
 
 
-def _remap_iteration(cfg, runners, params, halo_fn, state, overlap=None):
-    _, _, run_trc = runners
-    st = dict(state)
-    for _ in range(cfg.n_split):
-        st = _acoustic_iteration(cfg, runners, params, halo_fn, st,
-                                 overlap=overlap)
+REMAP_FIELDS = ("pt", "w", "u", "v")
+
+
+def _scan_substeps(body, st, n, unroll):
+    """Run ``body`` n times over the state dict: ``lax.scan``-rolled by
+    default (the body is traced once and compiled once, regardless of n —
+    one dispatch per step), or a Python-level unrolled loop for A/B
+    comparison and debugging."""
+    if unroll:
+        for _ in range(n):
+            st = body(st)
+        return st
+
+    def scan_body(carry, _):
+        return body(carry), None
+
+    st, _ = jax.lax.scan(scan_body, st, None, length=n)
+    return st
+
+
+def _remap_iteration(cfg, runners, params, halo_fn, state, metrics,
+                     overlap=None, unroll=False, counters=None):
+    run_trc, run_remap = runners[2], runners[3]
+
+    def acoustic_body(st):
+        if counters is not None:
+            counters["acoustic_traces"] += 1
+        return _acoustic_iteration(cfg, runners, params, halo_fn, st,
+                                   metrics, overlap=overlap)
+
+    st = _scan_substeps(acoustic_body, dict(state), cfg.n_split, unroll)
     if overlap is not None and overlap[2] is not None:
         ex = halo_fn(st, ["u", "v", *cfg.tracers])
         stale = {"u": st["u"], "v": st["v"],
@@ -320,23 +451,50 @@ def _remap_iteration(cfg, runners, params, halo_fn, state, overlap=None):
         out = run_trc(trc_in, params)
     for q in cfg.tracers:
         st[q] = out[f"{q}_out"]
-    # vertical remap back to reference levels
-    to_remap = {k: st[k] for k in ("pt", "w", "u", "v", *cfg.tracers)}
-    delp_ref, remapped = vertical_remap(cfg, st["delp"], to_remap)
-    st["delp"] = delp_ref
-    st.update(remapped)
+    # vertical remap back to reference levels — a compiled stencil program
+    # like every other motif (interface fields, pass manager, tuning cache)
+    names = (*REMAP_FIELDS, *cfg.tracers)
+    rout = run_remap({"delp": st["delp"],
+                      **{q: st[q] for q in names}}, params)
+    st["delp"] = rout["delp_out"]
+    for q in names:
+        st[q] = rout[f"{q}_out"]
     return st
 
 
 def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
                          hardware=None, optimize: bool = True,
-                         opt_level: int | None = None) -> Callable:
-    """Physics step on global (6, nk, npx+2h, npx+2h) arrays, one device."""
+                         opt_level: int | None = None,
+                         unroll: bool = False,
+                         donate: bool = False) -> Callable:
+    """Physics step on global (6, nk, npx+2h, npx+2h) arrays, one device.
+
+    The whole step — ``k_split`` remap iterations, each holding ``n_split``
+    acoustic substeps rolled into ``jax.lax.scan``, tracer transport and the
+    compiled vertical remap — is ONE jitted callable: a single dispatch per
+    step, instead of a Python-level dispatch per substep.  ``unroll=True``
+    restores the unrolled Python loop for A/B comparison; both paths are
+    bit-equivalent.
+
+    ``donate=True`` donates the input state dict on platforms where XLA
+    honors donation (TPU/GPU; see :func:`donation_supported`) — the
+    steady-state production loop ``state = step(state)``.  It is opt-in
+    (matching ``compile_program``): a donated input's buffers are invalid
+    after the call, so callers that keep reading the pre-step state must
+    leave it off.
+
+    The returned callable exposes ``opt_report`` (per-program pass-pipeline
+    reports covering acoustic + tracer + remap), ``n_kernels`` and
+    ``counters`` (trace/dispatch instrumentation used by the
+    dispatch-count tests and benchmarks).
+    """
     dom = cfg.seq_dom()
-    _, runners = _make_programs(cfg, dom, backend,
-                                _resolve_opt_level(optimize, opt_level),
-                                hardware)
+    progs, runners = _make_programs(cfg, dom, backend,
+                                    _resolve_opt_level(optimize, opt_level),
+                                    hardware)
     params = default_params(cfg)
+    counters = {"acoustic_traces": 0, "runner_dispatches": 0,
+                "step_calls": 0}
 
     def halo_fn(st, names):
         vec = [("u", "v")] if ("u" in names and "v" in names) else []
@@ -347,33 +505,40 @@ def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
         return {**st, **out}
 
     def tile_runner(run):
-        return jax.vmap(run, in_axes=(0, None))
+        vmapped = jax.vmap(run, in_axes=(0, None))
+
+        def counting(fields, ps):
+            counters["runner_dispatches"] += 1
+            return vmapped(fields, ps)
+
+        return counting
 
     runners_v = tuple(tile_runner(r) for r in runners)
+    # cosa/sina hoisted out of the scan body: constants are built once per
+    # step closure, not re-materialized every acoustic substep
+    metrics = _metric_terms(cfg, (6,) + dom.padded_shape())
 
-    def _remap_iteration_v(st):
-        for _ in range(cfg.n_split):
-            st = _acoustic_iteration(cfg, runners_v, params, halo_fn, st)
-        st = halo_fn(st, ["u", "v", *cfg.tracers])
-        trc_in = {"u": st["u"], "v": st["v"],
-                  **{q: st[q] for q in cfg.tracers}}
-        out = runners_v[2](trc_in, params)
-        for q in cfg.tracers:
-            st[q] = out[f"{q}_out"]
-        to_remap = {k: st[k] for k in ("pt", "w", "u", "v", *cfg.tracers)}
-        delp_ref, remapped = jax.vmap(
-            lambda d, f: vertical_remap(cfg, d, f))(st["delp"], to_remap)
-        st["delp"] = delp_ref
-        st.update(remapped)
-        return st
+    def _step(state: dict) -> dict:
+        def remap_body(st):
+            return _remap_iteration(cfg, runners_v, params, halo_fn, st,
+                                    metrics, unroll=unroll,
+                                    counters=counters)
 
-    @jax.jit
+        return _scan_substeps(remap_body, dict(state), cfg.k_split, unroll)
+
+    jitted = (jax.jit(_step, donate_argnums=(0,))
+              if donate and donation_supported() else jax.jit(_step))
+
+    @functools.wraps(_step)
     def step(state: dict) -> dict:
-        st = dict(state)
-        for _ in range(cfg.k_split):
-            st = _remap_iteration_v(st)
-        return st
+        counters["step_calls"] += 1
+        return jitted(state)
 
+    step.counters = counters
+    step.opt_report = {p.name: r.opt_report for p, r in zip(progs, runners)}
+    step.n_kernels = sum(r.n_kernels for r in runners)
+    step.programs = progs
+    step.unrolled = unroll
     return step
 
 
@@ -381,7 +546,8 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
                           hardware=None, optimize: bool = True,
                           opt_level: int | None = None,
                           ensemble: bool = False,
-                          overlap: bool = True) -> Callable:
+                          overlap: bool = True,
+                          unroll: bool = False) -> Callable:
     """shard_map'd physics step over mesh ("tile","y","x") — or, multi-pod,
     ("ens","tile","y","x") with independent ensemble members (the NWP
     production multi-pod workload).
@@ -407,24 +573,28 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     py, px = cfg.layout
     nl, h, nk = cfg.n_local, cfg.halo, cfg.nk
 
+    # the remap program is purely vertical (no horizontal reads), so it
+    # never participates in halo/compute overlap — compile it plain
+    run_remap = compile_program(progs[3], backend, hardware=hardware,
+                                interpret=True, opt_level=lvl)
     ov = None
     if overlap:
         cands = tuple(
             make_overlapped_runner(p, backend=backend, hardware=hardware,
                                    opt_level=lvl)
-            for p in progs)
+            for p in progs[:3])
         if all(c is not None for c in cands):
             ov = cands
     if ov is not None:
         # the overlapped runners embed the opt-ladder-compiled full-domain
         # program — reuse it rather than running the optimizer again for
         # fallback runners the overlap branch never calls
-        runners = tuple(c.full_run for c in ov)
+        runners = tuple(c.full_run for c in ov) + (run_remap,)
     else:
         runners = tuple(
             compile_program(p, backend, hardware=hardware, interpret=True,
                             opt_level=lvl)
-            for p in progs)
+            for p in progs[:3]) + (run_remap,)
 
     def halo_fn(st, names):
         vec = [("u", "v")] if ("u" in names and "v" in names) else []
@@ -433,13 +603,17 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         return {**st, **out}
 
     lead = 4 if ensemble else 3
+    metrics = _metric_terms(cfg, dom.padded_shape())
 
     def local_step(state: dict) -> dict:
         st = {k: v.reshape(nk, nl + 2 * h, nl + 2 * h)
               for k, v in state.items()}
-        for _ in range(cfg.k_split):
-            st = _remap_iteration(cfg, runners, params, halo_fn, st,
-                                  overlap=ov)
+
+        def remap_body(s):
+            return _remap_iteration(cfg, runners, params, halo_fn, s,
+                                    metrics, overlap=ov, unroll=unroll)
+
+        st = _scan_substeps(remap_body, st, cfg.k_split, unroll)
         return {k: v.reshape((1,) * lead + (nk, nl + 2 * h, nl + 2 * h))
                 for k, v in st.items()}
 

@@ -13,7 +13,9 @@ Modules mirror the FORTRAN subroutine structure (paper §IV-A):
 
 from __future__ import annotations
 
-from repro.core.stencil import Field, Param, gtstencil
+from repro.core.stencil import (Assign, Computation, Field, FieldAccess,
+                                Interval, Param, Stencil, gtstencil, interface)
+from repro.core.stencil import ir as _ir
 
 # ---------------------------------------------------------------------------
 # fv_tp_2d: PPM finite-volume transport
@@ -238,3 +240,138 @@ def w_update(w: Field, pp: Field, delp: Field, dt: Param):
             w = w[0, 0, 0] + dt * (pp[0, 0, 1] - pp[0, 0, 0]) / delp[0, 0, 0]
         with interval(-1, None):
             w = w[0, 0, 0] - dt * pp[0, 0, 0] / delp[0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# vertical remapping (paper Fig. 2 orange region) — K-interface fields
+# ---------------------------------------------------------------------------
+#
+# The Lagrangian-to-reference remap is built from interface-field stencils so
+# the whole loop compiles through ``compile_program``: FORWARD cumulative
+# builds of the interface pressures / mass integrals, a data-oblivious
+# piecewise-linear interpolation of the cumulative mass onto the reference
+# interfaces, and *exact interface differencing* for the remapped means
+# (conservation telescopes: sum(q_out * delp_ref) == F[nk] - F[0] by
+# construction — no denominator floor anywhere).
+
+
+@gtstencil
+def lagrangian_pe(delp: Field, pe: Field[interface], ptop: Param):
+    """Deformed (Lagrangian) interface pressures: FORWARD mass integration
+    onto the nk+1 interface levels."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            pe = ptop
+        with interval(1, None):
+            pe = pe[0, 0, -1] + delp[0, 0, -1]
+
+
+@gtstencil
+def column_total(delp: Field, cum: Field, total: Field):
+    """Column mass total broadcast to every level: FORWARD running sum,
+    then a BACKWARD copy-down of the bottom value (loop-carried)."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            cum = delp
+        with interval(1, None):
+            cum = cum[0, 0, -1] + delp
+    with computation(BACKWARD):
+        with interval(-1, None):
+            total = cum
+        with interval(0, -1):
+            total = total[0, 0, 1]
+
+
+@gtstencil
+def reference_pe(total: Field, pe_ref: Field[interface], ptop: Param,
+                 rk: Param):
+    """Reference sigma-coordinate interfaces: uniform slices of the column
+    total (``rk`` = 1/nk), accumulated FORWARD on interface levels."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            pe_ref = ptop
+        with interval(1, None):
+            pe_ref = pe_ref[0, 0, -1] + total[0, 0, -1] * rk
+
+
+@gtstencil
+def cumsum_mass(q: Field, delp: Field, fm: Field[interface]):
+    """Cumulative mass-weighted integral of ``q`` at Lagrangian interfaces."""
+    with computation(FORWARD):
+        with interval(0, 1):
+            fm = 0.0
+        with interval(1, None):
+            fm = fm[0, 0, -1] + q[0, 0, -1] * delp[0, 0, -1]
+
+
+@gtstencil
+def remap_delp(pe_ref: Field[interface], delp_out: Field):
+    """New layer thicknesses by exact interface differencing — the same
+    denominators :func:`remap_field` divides by, so mass is conserved
+    identically (the old ``maximum(delp_ref, 1e-10)`` floor broke this for
+    thin reference layers)."""
+    with computation(PARALLEL), interval(...):
+        delp_out = pe_ref[0, 0, 1] - pe_ref[0, 0, 0]
+
+
+@gtstencil
+def remap_field(fi: Field[interface], pe_ref: Field[interface], q_out: Field):
+    """Remapped layer mean from the interpolated cumulative mass: exact
+    interface differencing of both numerator and denominator."""
+    with computation(PARALLEL), interval(...):
+        q_out = (fi[0, 0, 1] - fi[0, 0, 0]) \
+            / (pe_ref[0, 0, 1] - pe_ref[0, 0, 0])
+
+
+def interface_interp_stencil(nk: int, name: str = "remap_interp") -> Stencil:
+    """Piecewise-linear interpolation of the cumulative mass ``fm`` (defined
+    at the Lagrangian interfaces ``pe``) onto the reference interfaces
+    ``pe_ref`` — built programmatically because the static-offset unrolling
+    is nk-dependent.
+
+    For each target interface level ``k`` one statement (restricted to
+    ``interval(k, k+1)``) selects the bracketing Lagrangian layer with a
+    nested ``where`` chain over all nk source layers at *static* K offsets
+    ``s - k`` — the data-dependent level search of the hand-written
+    ``jnp.interp`` remap made data-oblivious, which is what lets the whole
+    remap run through the stencil toolchain.  The first/last layers are
+    catch-alls, so ties and float drift at the column ends extrapolate
+    linearly instead of falling out of every mask.
+
+    Cost note: the unrolling is O(nk²) IR nodes per remapped field — the
+    price of expressing the search in an algebra restricted to static
+    offsets (a bracketing bisection needs data-dependent indexing, which
+    this IR deliberately has none of).  Fine at the level counts this repo
+    runs (nk ≤ 16); production-scale columns (nk ~ 80) want a ``while``
+    construct in the DSL, the same extension GT4Py grew for exactly this
+    loop — tracked as an open item.
+    """
+    stmts = []
+    for k in range(nk + 1):
+        def pe(s: int) -> FieldAccess:
+            return FieldAccess("pe", (0, 0, s - k))
+
+        def fm(s: int) -> FieldAccess:
+            return FieldAccess("fm", (0, 0, s - k))
+
+        p = FieldAccess("pe_ref", (0, 0, 0))
+
+        def term(s: int):
+            # linear interp inside source layer s; the slope guard only
+            # fires for zero-thickness Lagrangian layers, whose mass
+            # increment is itself zero — conservation is untouched
+            slope = (fm(s + 1) - fm(s)) \
+                / _ir.maximum(pe(s + 1) - pe(s), 1e-30)
+            return fm(s) + (p - pe(s)) * slope
+
+        expr = term(nk - 1)  # bottom layer: catch-all
+        for s in reversed(range(nk - 1)):
+            expr = _ir.where(p < pe(s + 1), term(s), expr)
+        stmts.append(Assign("fi", expr, Interval((0, k), (0, k + 1))))
+    return Stencil(
+        name=name,
+        computations=(Computation(_ir.PARALLEL, tuple(stmts)),),
+        fields=("fm", "pe", "pe_ref", "fi"),
+        outputs=("fi",),
+        interface_fields=("fm", "pe", "pe_ref", "fi"),
+    )
