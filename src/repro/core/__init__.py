@@ -64,3 +64,8 @@ from .transforms import (  # noqa: F401
     subgraph_fuse,
 )
 from .autotune import TuneResult, model_cost, tune_stencil, wallclock  # noqa: F401
+from .stencil import (  # noqa: F401
+    at_found,
+    index_search,
+    solver_k_blockable,
+)

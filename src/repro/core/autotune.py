@@ -24,7 +24,8 @@ import numpy as np
 from .hardware import Hardware, resolve_hardware
 from .stencil.domain import DomainSpec
 from .stencil.ir import Stencil
-from .stencil.schedule import Schedule, vmem_footprint
+from .stencil.schedule import (Schedule, kblocked_applies,
+                               solver_carried_fields, vmem_footprint)
 
 
 def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
@@ -48,12 +49,30 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
 
     launch_overhead = 1e-6  # per pallas_call / grid step pipeline fill
     if stencil.is_vertical_solver():
-        if sched.carry_storage == "vmem":
-            # re-read previously written levels from VMEM→VREG each step:
-            # extra traffic ≈ one written-field plane per level
-            extra = len(stencil.written()) * vol * dtype_bytes
-            t += 0.25 * extra / hw.hbm_bw
-        t += launch_overhead
+        if vmem_footprint(stencil, sched, (nk, nj, ni),
+                          dtype_bytes) > hw.vmem_bytes:
+            # whole-column blocks stop fitting at production depths
+            # (nk ~ 80 on large tiles); the K-blocked marching schedules
+            # below are then the only finite-cost options
+            return float("inf")
+        if kblocked_applies(stencil, sched, nk):
+            bk = sched.block_k
+            # K-blocked marching: one sequential grid step per block
+            # (pipeline fill each) plus the carry planes staged through
+            # scratch at every block boundary
+            n_blocks = max(1, nk // bk)
+            plane = (nj + 2 * dom.extend[1]) * (ni + 2 * dom.extend[0])
+            carry_bytes = (len(solver_carried_fields(stencil))
+                           * plane * dtype_bytes)
+            t += launch_overhead * (1 + 0.05 * (n_blocks - 1))
+            t += 2 * (n_blocks - 1) * carry_bytes / hw.hbm_bw
+        else:
+            if sched.carry_storage == "vmem":
+                # re-read previously written levels from VMEM→VREG each
+                # step: extra traffic ≈ one written-field plane per level
+                extra = len(stencil.written()) * vol * dtype_bytes
+                t += 0.25 * extra / hw.hbm_bw
+            t += launch_overhead
     else:
         bk = sched.block_k or nk
         n_blocks = max(1, nk // bk)

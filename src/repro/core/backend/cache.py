@@ -36,8 +36,10 @@ _CACHE_VERSION = 1
 #: change behavior, so persisted results from the old model are never
 #: served for the new one.  (v4: K-interface fields — per-field extents in
 #: vmem_footprint/node_bytes and whole-K-only schedules for staggered
-#: stencils.)
-COST_MODEL_VERSION = 4
+#: stencils.  v5: sequential-K — K-blocked marching schedules for vertical
+#: solvers with carry-plane footprints, whole-column VMEM feasibility
+#: enforced in model_cost, and level-search marching FLOPs in node_flops.)
+COST_MODEL_VERSION = 5
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:

@@ -12,6 +12,7 @@ written field (GT4Py mutates in place; JAX cannot).
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Mapping
 
@@ -28,7 +29,9 @@ from ..stencil.ir import (
     Direction,
     Expr,
     FieldAccess,
+    FoundLevel,
     Interval,
+    LevelSearch,
     Max,
     Min,
     ParamRef,
@@ -79,27 +82,94 @@ def _read(arr: jnp.ndarray, off, dom: DomainSpec, k_slice):
     return arr[ksl, jsl, isl]
 
 
-def _eval(e: Expr, env, dom: DomainSpec, k_slice=None):
+def _read_col(arr: jnp.ndarray, di: int, dj: int, dom: DomainSpec):
+    """Full-K column stack of ``arr`` over the (extended) write window at a
+    horizontal offset — what a :class:`LevelSearch` walks."""
+    ei, ej = dom.extend
+    h = dom.halo
+    jsl = slice(h - ej + dj, h + dom.nj + ej + dj)
+    isl = slice(h - ei + di, h + dom.ni + ei + di)
+    return arr[:, jsl, isl]
+
+
+def _bisect_levels(cwin, target, lo: int, hi: int):
+    """Largest layer ``s`` in ``[lo, hi-1]`` with ``s == lo`` or
+    ``cwin[s] <= target`` — the LevelSearch selection rule — found by
+    ``lax.fori_loop`` bisection: O(log nk) gathers, O(1) trace size.
+
+    ``cwin`` is ``(K_c, J, I)``; ``target`` broadcasts against its planes
+    (``(rows, J, I)`` for a PARALLEL sweep, ``(1, J, I)`` per solver
+    level); returns int32 indices of ``target``'s shape.
+    """
+    shape = jnp.broadcast_shapes(jnp.shape(target),
+                                 (1,) + tuple(cwin.shape[1:]))
+    lo_a = jnp.full(shape, lo, jnp.int32)
+    hi_a = jnp.full(shape, hi - 1, jnp.int32)
+    n = hi - lo
+    if n <= 1:
+        return lo_a
+    steps = int(math.ceil(math.log2(n)))
+
+    def body(_, lh):
+        lo_i, hi_i = lh
+        mid = (lo_i + hi_i + 1) // 2
+        cm = jnp.take_along_axis(cwin, mid, axis=0)
+        take = cm <= target
+        return jnp.where(take, mid, lo_i), jnp.where(take, hi_i, mid - 1)
+
+    lo_a, _ = jax.lax.fori_loop(0, steps, body, (lo_a, hi_a))
+    return lo_a
+
+
+def _eval_search(e: LevelSearch, env, dom: DomainSpec, k_slice, eval_fn):
+    """Lower a LevelSearch: bisect the coordinate column, then evaluate the
+    body with FoundLevel reads gathered at the selected layer."""
+    target = eval_fn(e.target)
+    cwin = _read_col(env[e.coord], 0, 0, dom)
+    lo, hi = e.resolve_bounds(dom.nk)
+    squeeze = jnp.ndim(target) == 2  # per-level solver evaluation
+    if squeeze:
+        target = target[None]
+    idx = _bisect_levels(cwin, target, lo, hi)
+
+    def found(fl: FoundLevel):
+        win = _read_col(env[fl.name], fl.di, fl.dj, dom)
+        v = jnp.take_along_axis(win, idx + fl.dk, axis=0)
+        return v[0] if squeeze else v
+
+    out = eval_fn(e.body, found)
+    return out
+
+
+def _eval(e: Expr, env, dom: DomainSpec, k_slice=None, found=None):
+    def ev(x, found=found):
+        return _eval(x, env, dom, k_slice, found)
+
     if isinstance(e, Const):
         return e.value
     if isinstance(e, ParamRef):
         return env[e.name]
     if isinstance(e, FieldAccess):
         return _read(env[e.name], e.offset, dom, k_slice)
+    if isinstance(e, LevelSearch):
+        return _eval_search(e, env, dom, k_slice,
+                            lambda x, f=None: ev(x, f))
+    if isinstance(e, FoundLevel):
+        if found is None:
+            raise TypeError("FoundLevel outside a LevelSearch body")
+        return found(e)
     if isinstance(e, BinOp):
-        return _BIN[e.op](_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+        return _BIN[e.op](ev(e.a), ev(e.b))
     if isinstance(e, UnaryOp):
-        return _UNARY[e.op](_eval(e.a, env, dom, k_slice))
+        return _UNARY[e.op](ev(e.a))
     if isinstance(e, Pow):
-        return jnp.power(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+        return jnp.power(ev(e.a), ev(e.b))
     if isinstance(e, Where):
-        return jnp.where(_eval(e.cond, env, dom, k_slice),
-                         _eval(e.a, env, dom, k_slice),
-                         _eval(e.b, env, dom, k_slice))
+        return jnp.where(ev(e.cond), ev(e.a), ev(e.b))
     if isinstance(e, Min):
-        return jnp.minimum(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+        return jnp.minimum(ev(e.a), ev(e.b))
     if isinstance(e, Max):
-        return jnp.maximum(_eval(e.a, env, dom, k_slice), _eval(e.b, env, dom, k_slice))
+        return jnp.maximum(ev(e.a), ev(e.b))
     raise TypeError(f"cannot lower {e!r}")
 
 
@@ -177,25 +247,36 @@ def _apply_vertical(comp: Computation, env: dict, dom: DomainSpec,
                 sl = jax.lax.dynamic_index_in_dim(local[name], k + dk, 0, keepdims=False)
                 return sl[jsl, isl]
 
-            def ev(e: Expr):
+            def ev(e: Expr, found=None):
                 if isinstance(e, Const):
                     return e.value
                 if isinstance(e, ParamRef):
                     return scalars[e.name]
                 if isinstance(e, FieldAccess):
                     return read2d(e.name, e.offset)
+                if isinstance(e, LevelSearch):
+                    # FORWARD/BACKWARD-legal: the search walks the whole
+                    # coordinate column regardless of the solver's level
+                    return _eval_search(e, local, dom, None,
+                                        lambda x, f=None: ev(x, f))
+                if isinstance(e, FoundLevel):
+                    if found is None:
+                        raise TypeError(
+                            "FoundLevel outside a LevelSearch body")
+                    return found(e)
                 if isinstance(e, BinOp):
-                    return _BIN[e.op](ev(e.a), ev(e.b))
+                    return _BIN[e.op](ev(e.a, found), ev(e.b, found))
                 if isinstance(e, UnaryOp):
-                    return _UNARY[e.op](ev(e.a))
+                    return _UNARY[e.op](ev(e.a, found))
                 if isinstance(e, Pow):
-                    return jnp.power(ev(e.a), ev(e.b))
+                    return jnp.power(ev(e.a, found), ev(e.b, found))
                 if isinstance(e, Where):
-                    return jnp.where(ev(e.cond), ev(e.a), ev(e.b))
+                    return jnp.where(ev(e.cond, found), ev(e.a, found),
+                                     ev(e.b, found))
                 if isinstance(e, Min):
-                    return jnp.minimum(ev(e.a), ev(e.b))
+                    return jnp.minimum(ev(e.a, found), ev(e.b, found))
                 if isinstance(e, Max):
-                    return jnp.maximum(ev(e.a), ev(e.b))
+                    return jnp.maximum(ev(e.a, found), ev(e.b, found))
                 raise TypeError(e)
 
             new2d = ev(st.value)

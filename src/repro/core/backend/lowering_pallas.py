@@ -41,7 +41,9 @@ from ..stencil.ir import (
     Direction,
     Expr,
     FieldAccess,
+    FoundLevel,
     Interval,
+    LevelSearch,
     Max,
     Min,
     ParamRef,
@@ -50,8 +52,10 @@ from ..stencil.ir import (
     Stencil,
     UnaryOp,
     Where,
+    expr_contains_level_search,
 )
-from ..stencil.schedule import Schedule, default_schedule
+from ..stencil.schedule import (Schedule, default_schedule, kblocked_applies,
+                                solver_carried_fields)
 
 _UNARY = {
     "neg": lambda x: -x,
@@ -76,28 +80,86 @@ _BIN = {
 }
 
 
-def _eval_block(e: Expr, read, params):
-    """Evaluate expression over a block; ``read(name, off)`` yields arrays."""
+def _march_search(e: LevelSearch, read, params, read_col, nk: int):
+    """Lower a LevelSearch as an in-kernel *marching loop*: one
+    ``fori_loop`` walk over the source layers, accumulating the bracketing
+    values of every FoundLevel access with selects — no gathers, so the
+    loop maps onto the VPU on real TPUs.  O(1) trace size in nk."""
+    if read_col is None or nk is None:
+        raise NotImplementedError(
+            "LevelSearch requires whole-column blocks (no read_col here)")
+    target = _eval_block(e.target, read, params, read_col=read_col, nk=nk)
+    cwin = read_col(e.coord, 0, 0)
+    lo, hi = e.resolve_bounds(nk)
+    finds = e.found_levels()
+    cols = {}
+    for fl in finds:
+        key = (fl.name, fl.di, fl.dj)
+        if key not in cols:
+            cols[key] = read_col(fl.name, fl.di, fl.dj)
+
+    def row(col, s):
+        return jax.lax.dynamic_index_in_dim(col, s, 0, keepdims=False)
+
+    shape = jnp.broadcast_shapes(jnp.shape(target), tuple(cwin.shape[1:]))
+
+    def vals_at(s):
+        return {(fl.name, fl.di, fl.dj, fl.dk): jnp.broadcast_to(
+                    row(cols[(fl.name, fl.di, fl.dj)], s + fl.dk), shape)
+                for fl in finds}
+
+    def body(s, acc):
+        take = row(cwin, s) <= target
+        fresh = vals_at(s)
+        return {k: jnp.where(take, fresh[k], acc[k]) for k in acc}
+
+    acc = vals_at(lo)
+    if hi > lo + 1:
+        acc = jax.lax.fori_loop(lo + 1, hi, body, acc)
+
+    def found(fl: FoundLevel):
+        return acc[(fl.name, fl.di, fl.dj, fl.dk)]
+
+    return _eval_block(e.body, read, params, read_col=read_col, nk=nk,
+                       found=found)
+
+
+def _eval_block(e: Expr, read, params, read_col=None, nk=None, found=None):
+    """Evaluate expression over a block; ``read(name, off)`` yields arrays.
+
+    ``read_col(name, di, dj)`` yields a field's *whole* K column over the
+    horizontal window — required (and only available under whole-K blocks)
+    for :class:`LevelSearch` lowering; ``found`` resolves FoundLevel
+    accesses inside a search body.
+    """
+    def ev(x, found=found):
+        return _eval_block(x, read, params, read_col=read_col, nk=nk,
+                           found=found)
+
     if isinstance(e, Const):
         return e.value
     if isinstance(e, ParamRef):
         return params[e.name]
     if isinstance(e, FieldAccess):
         return read(e.name, e.offset)
+    if isinstance(e, LevelSearch):
+        return _march_search(e, read, params, read_col, nk)
+    if isinstance(e, FoundLevel):
+        if found is None:
+            raise TypeError("FoundLevel outside a LevelSearch body")
+        return found(e)
     if isinstance(e, BinOp):
-        return _BIN[e.op](_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+        return _BIN[e.op](ev(e.a), ev(e.b))
     if isinstance(e, UnaryOp):
-        return _UNARY[e.op](_eval_block(e.a, read, params))
+        return _UNARY[e.op](ev(e.a))
     if isinstance(e, Pow):
-        return jnp.power(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+        return jnp.power(ev(e.a), ev(e.b))
     if isinstance(e, Where):
-        return jnp.where(_eval_block(e.cond, read, params),
-                         _eval_block(e.a, read, params),
-                         _eval_block(e.b, read, params))
+        return jnp.where(ev(e.cond), ev(e.a), ev(e.b))
     if isinstance(e, Min):
-        return jnp.minimum(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+        return jnp.minimum(ev(e.a), ev(e.b))
     if isinstance(e, Max):
-        return jnp.maximum(_eval_block(e.a, read, params), _eval_block(e.b, read, params))
+        return jnp.maximum(ev(e.a), ev(e.b))
     raise TypeError(e)
 
 
@@ -176,7 +238,10 @@ def _inline_offset_temps(stencil: Stencil) -> Stencil:
     for s in stmts:
         t = s.target
         if (t not in temps or n_defs[t] != 1 or s.region is not None
-                or s.interval != full):
+                or s.interval != full
+                or expr_contains_level_search(s.value)):
+            # level searches walk absolute coordinate levels; replicating
+            # one at a shifted offset is not a pure IR shift
             continue
 
         def expand(e: Expr) -> Expr:
@@ -224,6 +289,8 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
         bk = nk  # K offsets require whole-column blocks
     if stencil.has_interface_fields():
         bk = nk  # interface and center fields never co-tile in K
+    if stencil.has_level_search():
+        bk = nk  # the search marches whole coordinate columns
     whole_k = bk == nk
 
     def kernel(*refs):
@@ -276,6 +343,19 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
             return read_resolved
 
+        def read_col(name, di, dj):
+            # whole-K column stack for LevelSearch walks (the schedule
+            # rules force bk == nk whenever a search is present)
+            ref = out_refs.get(name, in_refs.get(name))
+            if ref is None:
+                if (di, dj) != (0, 0):
+                    raise NotImplementedError(
+                        f"horizontal-offset search read of in-kernel "
+                        f"temporary {name!r}")
+                return env[name]
+            jsl, isl = _hwindow(dom, dj, di)
+            return ref[:, jsl, isl]
+
         ei, ej = dom.extend
         nj_w, ni_w = dom.nj + 2 * ej, dom.ni + 2 * ei
         for st in statements:
@@ -283,7 +363,8 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
             rows = tgt_nk if whole_k else bk
             kk = (jax.lax.broadcasted_iota(
                 jnp.int32, (rows, nj_w, ni_w), 0) + k0)
-            val = _eval_block(st.value, make_read(rows), params)
+            val = _eval_block(st.value, make_read(rows), params,
+                              read_col=read_col if whole_k else None, nk=nk)
             klo, khi = st.interval.resolve(tgt_nk)
             jsl, isl = _hwindow(dom, 0, 0)
             tgt_ref = out_refs.get(st.target)
@@ -362,6 +443,10 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                 return temp_refs[name]
             return in_refs[name]
 
+        def read_col(name, di, dj):
+            js, is_ = _hwindow(dom, dj, di)
+            return ref_of(name)[:, js, is_]
+
         for comp in stencil.computations:
             if comp.direction is Direction.PARALLEL:
                 # elementwise pass inside a solver stencil (fused subgraphs
@@ -375,7 +460,8 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                         di, dj, dk = off
                         js, is_ = _hwindow(dom, dj, di)
                         return _kshift_read(ref_of(name), dk, rows, js, is_)
-                    val = _eval_block(st.value, read_par, params)
+                    val = _eval_block(st.value, read_par, params,
+                                      read_col=read_col, nk=nk)
                     klo, khi = st.interval.resolve(rows)
                     tgt = ref_of(st.target)
                     cur = tgt[:, jsl, isl]
@@ -416,7 +502,8 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                 new_carry = dict(carry)
                 for st in comp.statements:
                     sklo, skhi = st.interval.resolve(ksz.get(st.target, nk))
-                    val = _eval_block(st.value, read_lvl, params)
+                    val = _eval_block(st.value, read_lvl, params,
+                                      read_col=read_col, nk=nk)
                     tgt = ref_of(st.target)
                     cur = tgt[k, jsl, isl]
                     val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
@@ -448,6 +535,166 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 
 # ---------------------------------------------------------------------------
+# Vertical solvers, K-blocked — sequential grid over K slabs, carry in
+# scratch (the production-depth schedule: nk ~ 80 columns fit VMEM)
+# ---------------------------------------------------------------------------
+
+
+def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
+                              sched: Schedule, param_names):
+    """K-blocked marching schedule for single-direction vertical solvers.
+
+    The TPU grid executes *sequentially*, so the K dimension becomes a grid
+    of ``nk // block_k`` slabs walked in marching order (top-down FORWARD,
+    bottom-up BACKWARD via a reversed index map); each invocation holds one
+    ``(block_k, J, I)`` VMEM block per field and marches its levels with an
+    in-kernel ``fori_loop``.  Loop-carried values — the marching-previous
+    level of every field read at that offset, written *or* input — live in
+    registers within the block and cross block boundaries through VMEM
+    scratch planes that persist across grid steps.  Legality is exactly
+    :func:`~repro.core.stencil.schedule.solver_k_blockable`.
+    """
+    written = [w for w in stencil.written() if w in stencil.fields]
+    fields = list(stencil.fields)
+    temps = stencil.temporaries()
+    nk = dom.nk
+    bk = sched.block_k
+    n_blocks = nk // bk
+    dirs = {c.direction for c in stencil.computations
+            if c.direction is not Direction.PARALLEL}
+    forward = Direction.FORWARD in dirs
+    carried = solver_carried_fields(stencil)
+
+    njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
+    shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
+    jsl, isl = _hwindow(dom, 0, 0)
+
+    def kernel(*refs):
+        n_in = len(fields) + len(param_names)
+        in_refs = dict(zip(fields, refs[:len(fields)]))
+        params = {p: refs[len(fields) + i][0]
+                  for i, p in enumerate(param_names)}
+        out_refs = dict(zip(written, refs[n_in:n_in + len(written)]))
+        scratch = refs[n_in + len(written):]
+        temp_refs = dict(zip(temps, scratch[:len(temps)]))
+        carry_refs = dict(zip(carried, scratch[len(temps):]))
+        for w in written:
+            out_refs[w][...] = in_refs[w][...]
+
+        g = pl.program_id(0)
+        # grid step g is the g-th block in *marching order*; the index maps
+        # place it top-down (FORWARD) or bottom-up (BACKWARD)
+        blk = g if forward else (n_blocks - 1 - g)
+        k0 = blk * bk
+
+        def ref_of(name):
+            if name in out_refs:
+                return out_refs[name]
+            if name in temp_refs:
+                return temp_refs[name]
+            return in_refs[name]
+
+        def dtype_of(name):
+            return ref_of(name).dtype
+
+        # block-boundary carry: the previous block's last marched level,
+        # staged through scratch; zeros on the first marching step (those
+        # reads are dead under the interval masks, but the selects must see
+        # well-defined numbers, not uninitialized VMEM)
+        first = g == 0
+        carry0 = {n: jnp.where(first, jnp.zeros(shape2d, dtype_of(n)),
+                               carry_refs[n][...])
+                  for n in carried}
+
+        def body(step, carry):
+            local = step if forward else bk - 1 - step
+            k = k0 + local  # absolute level, for interval masks
+
+            def read_lvl(name, off):
+                di, dj, dk = off
+                if dk != 0:
+                    # solver_k_blockable guarantees dk == marching-previous
+                    # with zero horizontal offset: always the carry
+                    return carry[name]
+                js, is_ = _hwindow(dom, dj, di)
+                return ref_of(name)[local, js, is_]
+
+            level_vals: dict[str, Any] = {}
+            for comp in stencil.computations:
+                for st in comp.statements:
+                    sklo, skhi = st.interval.resolve(nk)
+                    val = _eval_block(st.value, read_lvl, params)
+                    tgt = ref_of(st.target)
+                    cur = tgt[local, jsl, isl]
+                    val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
+                    active = (k >= sklo) & (k < skhi)
+                    if st.region is not None:
+                        rm = _region_mask_block(st.region, dom)
+                        val = jnp.where(rm, val, cur)
+                    newv = jnp.where(active, val, cur)
+                    tgt[local, jsl, isl] = newv
+                    level_vals[st.target] = newv
+
+            new_carry = {}
+            for n in carried:
+                if n in level_vals:
+                    new_carry[n] = level_vals[n]
+                else:  # carried input (or untouched temp): this level's row
+                    new_carry[n] = ref_of(n)[local, jsl, isl]
+            return new_carry
+
+        final = jax.lax.fori_loop(0, bk, body, carry0)
+        for n in carried:
+            carry_refs[n][...] = final[n]
+        return
+
+    if forward:
+        imap = lambda g: (g, 0, 0)  # noqa: E731
+    else:
+        imap = lambda g: (n_blocks - 1 - g, 0, 0)  # noqa: E731
+
+    def block():
+        return pl.BlockSpec((bk, njp, nip), imap)
+
+    grid = (n_blocks,)
+    in_specs = ([block() for _ in fields] +
+                [pl.BlockSpec(memory_space=pl.ANY) for _ in param_names])
+    out_specs = [block() for _ in written]
+    return kernel, grid, in_specs, out_specs, written, temps, carried
+
+
+def _compile_kblocked(stencil: Stencil, dom: DomainSpec, sched: Schedule,
+                      param_names, dtype, interpret: bool):
+    kernel, grid, in_specs, out_specs, written, temps, carried = \
+        _vertical_kernel_kblocked(stencil, dom, sched, param_names)
+    njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
+    shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
+    # temporaries hold only the current block's rows; carry planes persist
+    # across the sequential grid — both VMEM scratch, never HBM
+    scratch = ([pltpu.VMEM((sched.block_k, njp, nip), dtype) for _ in temps] +
+               [pltpu.VMEM(shape2d, dtype) for _ in carried])
+
+    def shape_of(name):
+        return dom.padded_shape(stencil.is_interface(name))
+
+    def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
+        params = dict(params or {})
+        args = ([jnp.asarray(fields[f]) for f in stencil.fields] +
+                [jnp.asarray(params[p], dtype=dtype).reshape(1)
+                 for p in param_names])
+        out_shapes = [jax.ShapeDtypeStruct(shape_of(w), args[0].dtype)
+                      for w in written]
+        outs = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shapes, scratch_shapes=scratch,
+            interpret=interpret,
+        )(*args)
+        return dict(zip(written, outs))
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
 # Public entry
 # ---------------------------------------------------------------------------
 
@@ -468,6 +715,16 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
 
     def shape_of(name):
         return dom.padded_shape(stencil.is_interface(name))
+
+    if (stencil.is_vertical_solver()
+            and kblocked_applies(stencil, sched, dom.nk,
+                                 scratch=scratch_temps)):
+        # K-blocked marching: sequential grid over K slabs with the loop
+        # carry staged through persistent VMEM scratch.  Requires TPU-style
+        # scratch (the GPU backend's parallel thread-block grid cannot
+        # order blocks, so it never enumerates this schedule).
+        return _compile_kblocked(stencil, dom, sched, param_names, dtype,
+                                 interpret)
 
     if stencil.is_vertical_solver():
         kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(

@@ -19,7 +19,8 @@ from typing import Any, Callable, Mapping
 import jax.numpy as jnp
 
 from .stencil.domain import DomainSpec
-from .stencil.ir import Assign, Computation, Expr, FieldAccess, ParamRef, Stencil
+from .stencil.ir import (Assign, Computation, Expr, FieldAccess, FoundLevel,
+                         LevelSearch, ParamRef, Stencil)
 from .stencil.schedule import Schedule
 
 
@@ -42,6 +43,14 @@ def rename_stencil(st: Stencil, field_map: Mapping[str, str],
             return FieldAccess(mapname(e.name), e.offset)
         if isinstance(e, ParamRef):
             return ParamRef(param_map.get(e.name, e.name))
+        if isinstance(e, LevelSearch):
+            # the coordinate and every level-found access carry field names
+            # outside the FieldAccess tree — they rename too, or fused /
+            # program-renamed searches would walk the wrong columns
+            return LevelSearch(mapname(e.coord), map_expr(e.target),
+                               map_expr(e.body), e.lo, e.hi)
+        if isinstance(e, FoundLevel):
+            return FoundLevel(mapname(e.name), e.dk, e.di, e.dj)
         return e.map_children(map_expr)
 
     comps = tuple(
@@ -156,6 +165,12 @@ class StencilProgram:
     # -- queries ---------------------------------------------------------------
     def all_nodes(self) -> list[Node]:
         return [n for s in self.states for n in s.nodes]
+
+    def ir_node_count(self) -> int:
+        """Total stencil-IR node count of the program (statements +
+        expression nodes) — the trace-size proxy the nk sweep and the
+        sequential-K acceptance criterion track."""
+        return sum(n.stencil.ir_size() for n in self.all_nodes())
 
     def node_dom(self, node: Node) -> DomainSpec:
         return dataclasses.replace(self.dom, extend=node.extend)

@@ -48,7 +48,15 @@ def node_flops(program: StencilProgram, node: Node) -> int:
     dom = program.node_dom(node)
     ei, ej = node.extend
     vol = dom.nk * (dom.nj + 2 * ej) * (dom.ni + 2 * ei)
-    return vol * node.stencil.flops()
+    flops = vol * node.stencil.flops()
+    # a LevelSearch marches O(nk) source layers per output point (compare +
+    # two selects per layer in the Pallas lowering; the jnp bisection is
+    # cheaper but the bound prices the worst backend) — nk-dependent, so it
+    # cannot live in the stencil's static per-point count
+    n_search = node.stencil.count_level_searches()
+    if n_search:
+        flops += n_search * 3 * dom.nk * vol
+    return flops
 
 
 def node_bound_seconds(program: StencilProgram, node: Node,

@@ -166,6 +166,10 @@ class _Parser(ast.NodeVisitor):
         if isinstance(node, ast.Call):
             if not isinstance(node.func, ast.Name):
                 raise StencilSyntaxError("only builtin stencil funcs callable")
+            if node.func.id == "index_search":
+                return self._parse_index_search(node)
+            if node.func.id == "at_found":
+                return self._parse_at_found(node)
             fn = _FUNCS.get(node.func.id)
             if fn is None:
                 raise StencilSyntaxError(f"unknown function {node.func.id!r}")
@@ -174,6 +178,37 @@ class _Parser(ast.NodeVisitor):
             return Where(self.expr(node.test), self.expr(node.body),
                          self.expr(node.orelse))
         raise StencilSyntaxError(f"unsupported expression {ast.dump(node)}")
+
+    def _field_name(self, node: ast.expr, what: str) -> str:
+        if not (isinstance(node, ast.Name)
+                and (node.id in self.fields or node.id in self.temps)):
+            raise StencilSyntaxError(f"{what} must be a bare field name")
+        return node.id
+
+    def _parse_index_search(self, node: ast.Call) -> Expr:
+        """``index_search(coord, target, body[, lo, hi])`` — the bounded
+        sequential-iteration construct: a monotone K-level search over the
+        ``coord`` column, lowered by every backend to a real loop."""
+        args = node.args
+        if not 3 <= len(args) <= 5:
+            raise StencilSyntaxError(
+                "index_search(coord, target, body[, lo, hi])")
+        coord = self._field_name(args[0], "index_search coordinate")
+        target = self.expr(args[1])
+        body = self.expr(args[2])
+        lo = self._static_int(args[3]) if len(args) > 3 else None
+        hi = self._static_int(args[4]) if len(args) > 4 else None
+        return ir.index_search(coord, target, body, lo, hi)
+
+    def _parse_at_found(self, node: ast.Call) -> Expr:
+        """``at_found(field[, dk])`` — read ``field`` at the level the
+        enclosing ``index_search`` selected, plus static offset ``dk``."""
+        args = node.args
+        if not 1 <= len(args) <= 2:
+            raise StencilSyntaxError("at_found(field[, dk])")
+        name = self._field_name(args[0], "at_found field")
+        dk = self._static_int(args[1]) if len(args) > 1 else 0
+        return ir.at_found(name, dk)
 
     def _offset(self, node: ast.expr) -> tuple[int, int, int]:
         if isinstance(node, ast.Tuple):
@@ -385,3 +420,5 @@ def gtstencil(fn: Callable | None = None, *, name: str | None = None):
 computation = ir.Direction  # placeholder binding
 horizontal = None
 region = None
+index_search = ir.index_search
+at_found = ir.at_found

@@ -237,6 +237,145 @@ class Max(Expr):
         return Max(f(self.a), f(self.b))
 
 
+@dataclasses.dataclass(frozen=True)
+class FoundLevel(Expr):
+    """Access ``name`` at the K level selected by the *enclosing*
+    :class:`LevelSearch`, plus a static offset ``dk`` (horizontal offsets
+    stay static as everywhere else in the IR).  Only legal inside a
+    ``LevelSearch`` body."""
+
+    name: str
+    dk: int = 0
+    di: int = 0
+    dj: int = 0
+
+    def _collect(self, out):
+        # report a zero-K access so halo/extent inference and read-set
+        # analysis see the field; the vertical reach is the search's whole
+        # column, which the schedule rules handle via has_level_search()
+        out.append(FieldAccess(self.name, (self.di, self.dj, 0)))
+
+    def shift(self, off: Offset) -> "FoundLevel":
+        di, dj, dk = off
+        if dk != 0:
+            raise ValueError(
+                "cannot K-shift a FoundLevel access: the searched level is "
+                "absolute, not relative to the iteration point")
+        return FoundLevel(self.name, self.dk, self.di + di, self.dj + dj)
+
+    def substitute(self, name, fn):
+        if self.name == name:
+            raise ValueError(
+                f"cannot substitute field {name!r} read through a level "
+                "search; inline fusion across a LevelSearch is illegal")
+        return self
+
+    def __repr__(self):
+        h = f",{self.di},{self.dj}" if (self.di or self.dj) else ""
+        return f"{self.name}[@found{self.dk:+d}{h}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSearch(Expr):
+    """Bounded monotone K-level search — the DSL's ``index_search`` (the
+    sequential-iteration construct production-scale vertical remapping
+    needs; GT4Py grew a ``while`` for exactly this loop).
+
+    Over source layers ``s`` in ``[lo, hi)`` (``(base, offset)`` bounds in
+    the :class:`Interval` convention, resolved against the *center* level
+    count ``nk``), select the bracketing layer of ``target`` in the
+    monotonically non-decreasing column ``coord``::
+
+        s* = lo + clamp(#{t in (lo, hi): coord[t] <= target}, 0, hi-lo-1)
+
+    i.e. the largest in-range layer whose lower coordinate does not exceed
+    the target, with the first and last layers as catch-alls (ties and
+    float drift at the column ends extrapolate linearly instead of falling
+    out of every mask).  The expression's value is ``body`` with every
+    :class:`FoundLevel` access resolved at ``s*`` — e.g. linear
+    interpolation within the bracketing layer.
+
+    Backends lower the search to *real loops* — ``lax.fori_loop`` bisection
+    in the jnp lowering, an in-kernel marching loop in Pallas — so the IR
+    and trace stay O(1) in ``nk`` instead of the O(nk²) static-offset
+    unrolling the construct replaces.
+    """
+
+    coord: str
+    target: Expr
+    body: Expr
+    lo: tuple[int, int] = (0, 0)
+    hi: tuple[int, int] = (1, 0)
+
+    def children(self):
+        return (self.target, self.body)
+
+    def map_children(self, f):
+        return LevelSearch(self.coord, f(self.target), f(self.body),
+                           self.lo, self.hi)
+
+    def _collect(self, out):
+        out.append(FieldAccess(self.coord, (0, 0, 0)))
+        self.target._collect(out)
+        self.body._collect(out)
+
+    def shift(self, off: Offset) -> "Expr":
+        if off == (0, 0, 0):
+            return self
+        # K shifts are meaningless (the search walks absolute levels) and
+        # horizontal shifts are unrepresentable: the coordinate column has
+        # no offset slot, so shifting target/body while the search brackets
+        # against the unshifted column would silently mix positions.  The
+        # fusion/inlining paths all refuse searches before shifting.
+        raise ValueError(
+            "cannot shift a LevelSearch: the searched coordinate column "
+            "cannot carry an offset")
+
+    def substitute(self, name, fn):
+        if name == self.coord:
+            raise ValueError(
+                f"cannot substitute search coordinate {name!r}; inline "
+                "fusion across a LevelSearch is illegal")
+        return self.map_children(lambda c: c.substitute(name, fn))
+
+    def resolve_bounds(self, nk: int) -> tuple[int, int]:
+        lo = self.lo[0] * nk + self.lo[1]
+        hi = self.hi[0] * nk + self.hi[1]
+        return max(0, lo), hi
+
+    def found_levels(self) -> list[FoundLevel]:
+        """Distinct FoundLevel accesses of the body, in first-use order."""
+        out: list[FoundLevel] = []
+
+        def walk(e: Expr) -> None:
+            if isinstance(e, FoundLevel) and e not in out:
+                out.append(e)
+            if isinstance(e, LevelSearch) and e is not self:
+                raise ValueError("nested LevelSearch is unsupported")
+            for c in e.children():
+                walk(c)
+
+        walk(self.body)
+        return out
+
+    def __repr__(self):
+        return (f"search({self.coord}[{self.lo}:{self.hi}] <= "
+                f"{self.target}: {self.body})")
+
+
+def expr_contains_level_search(e: Expr) -> bool:
+    if isinstance(e, (LevelSearch, FoundLevel)):
+        return True
+    return any(expr_contains_level_search(c) for c in e.children())
+
+
+def expr_size(e: Expr) -> int:
+    """IR node count of an expression tree (LevelSearch counts its target
+    and body once — the whole point of the construct is that this stays
+    O(1) in nk)."""
+    return 1 + sum(expr_size(c) for c in e.children())
+
+
 def as_expr(v: Any) -> Expr:
     if isinstance(v, Expr):
         return v
@@ -284,6 +423,52 @@ def where(c, a, b):
 
 def eq(a, b):
     return BinOp("==", as_expr(a), as_expr(b))
+
+
+def _search_bound(v: int | None, default: tuple[int, int]) -> tuple[int, int]:
+    if v is None:
+        return default
+    return (1, v) if v < 0 else (0, v)
+
+
+def _contains_search(e: Expr) -> bool:
+    if isinstance(e, LevelSearch):
+        return True
+    return any(_contains_search(c) for c in e.children())
+
+
+def index_search(coord: str | FieldAccess, target: Any, body: Any,
+                 lo: int | None = None, hi: int | None = None) -> LevelSearch:
+    """Functional builder for :class:`LevelSearch`.
+
+    ``coord`` is the field searched along K; ``lo``/``hi`` bound the source
+    layers with the :func:`interval` convention (negative = from the
+    bottom; defaults cover all ``nk`` layers).  Inside ``body`` use
+    :func:`at_found` to read fields at the selected layer.
+    """
+    if isinstance(coord, FieldAccess):
+        if coord.offset != (0, 0, 0):
+            raise ValueError("search coordinate must be an unoffset field")
+        coord = coord.name
+    target, body = as_expr(target), as_expr(body)
+    # reject nesting at construction so every backend agrees: the jnp
+    # lowering would otherwise silently bind outer at_found accesses to the
+    # inner search's level while Pallas errors at kernel build
+    if _contains_search(target) or _contains_search(body):
+        raise ValueError("nested index_search is unsupported")
+    return LevelSearch(coord, target, body,
+                       _search_bound(lo, (0, 0)), _search_bound(hi, (1, 0)))
+
+
+def at_found(field: str | FieldAccess, dk: int = 0) -> FoundLevel:
+    """Read ``field`` at the level found by the enclosing search, plus a
+    static K offset ``dk`` (``at_found(pe, 1)`` = the layer's upper
+    interface)."""
+    if isinstance(field, FieldAccess):
+        if field.offset[2] != 0:
+            raise ValueError("at_found takes its K offset as `dk`")
+        return FoundLevel(field.name, dk, field.offset[0], field.offset[1])
+    return FoundLevel(field, dk)
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +705,35 @@ class Stencil:
                 return True
         return False
 
+    def has_level_search(self) -> bool:
+        """True if any statement contains a :class:`LevelSearch` — such
+        statements read whole coordinate columns, so the stencil only gets
+        whole-K blocks (same rule as K offsets / interface fields)."""
+        return any(expr_contains_level_search(s.value)
+                   for c in self.computations for s in c.statements)
+
+    def count_level_searches(self) -> int:
+        n = 0
+
+        def walk(e: Expr) -> None:
+            nonlocal n
+            if isinstance(e, LevelSearch):
+                n += 1
+            for c in e.children():
+                walk(c)
+
+        for c in self.computations:
+            for s in c.statements:
+                walk(s.value)
+        return n
+
+    def ir_size(self) -> int:
+        """Total IR node count (statements + expression nodes) — the
+        quantity the sequential-K construct keeps O(1) per statement where
+        static-offset unrolling was O(nk) per level."""
+        return sum(1 + expr_size(s.value)
+                   for c in self.computations for s in c.statements)
+
     # -- vertical staggering --------------------------------------------------
     def is_interface(self, name: str) -> bool:
         return name in self.interface_fields
@@ -551,6 +765,11 @@ class Stencil:
                 total += 10  # general pow cost before strength reduction
             elif isinstance(e, UnaryOp):
                 total += {"sqrt": 4, "exp": 8, "log": 8}.get(e.op, 1)
+            elif isinstance(e, LevelSearch):
+                # static charge for the search control flow; the
+                # nk-dependent marching cost is priced by the perf model
+                # (perfmodel.node_flops), which knows the domain
+                total += 16
             for c in e.children():
                 walk(c)
 

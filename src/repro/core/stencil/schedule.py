@@ -26,12 +26,18 @@ import itertools
 from typing import Iterator
 
 from ..hardware import Hardware, resolve_hardware
-from .ir import Stencil
+from .ir import Direction, Stencil, expr_contains_level_search
 
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    # tile sizes; 0 means "whole extent"
+    # tile sizes; 0 means "whole extent".  For vertical solvers a nonzero
+    # ``block_k`` (with ``k_as_grid=False``) selects the K-blocked marching
+    # schedule: the K grid dimension is *sequential* (TPU grids iterate in
+    # order), each invocation marches ``block_k`` levels in VMEM and the
+    # loop carry crosses block boundaries through persistent scratch —
+    # production-depth columns (nk ~ 80) fit VMEM without giving up the
+    # sequential solve.
     block_i: int = 0
     block_j: int = 0
     block_k: int = 8
@@ -58,6 +64,85 @@ class Schedule:
         return cls(**d)
 
 
+def solver_carried_fields(stencil: Stencil) -> list[str]:
+    """Fields (written *or* input) read at the marching-previous level
+    inside a sequential computation — the values a K-blocked schedule must
+    carry across block boundaries in scratch."""
+    out: list[str] = []
+    for c in stencil.computations:
+        if c.direction is Direction.PARALLEL:
+            continue
+        prev = -1 if c.direction is Direction.FORWARD else 1
+        for s in c.statements:
+            for a in s.value.accesses():
+                if a.offset[2] == prev and a.name not in out:
+                    out.append(a.name)
+    return out
+
+
+def solver_k_blockable(stencil: Stencil) -> bool:
+    """True when a vertical solver admits the K-blocked marching schedule.
+
+    The blocked lowering marches all levels in one direction with a
+    single-level carry, so it requires:
+
+     * exactly one sequential direction (a FORWARD+BACKWARD stencil like
+       the Thomas algorithm needs two passes over the column — it keeps
+       whole-column blocks);
+     * no interface fields (nk+1 rows cannot co-tile with nk-row centers);
+     * every K read either at the current level or at the marching-previous
+       level with zero horizontal offset (deeper or offset reads would
+       reach outside the block and its one-level carry);
+     * no marching-previous read of a field a *later* computation writes —
+       reference semantics run each computation as a separate full K
+       sweep, so such a read must observe the later computation's
+       pre-sweep values, which the per-level interleaved march cannot
+       provide (its carry already holds the updated level);
+     * no :class:`~repro.core.stencil.ir.LevelSearch` (the search reads
+       whole coordinate columns).
+    """
+    dirs = {c.direction for c in stencil.computations
+            if c.direction is not Direction.PARALLEL}
+    if len(dirs) != 1 or stencil.has_interface_fields():
+        return False
+    prev = -1 if Direction.FORWARD in dirs else 1
+    # fields written strictly after each computation, in program order
+    later_written: list[set[str]] = []
+    suffix: set[str] = set()
+    for c in reversed(stencil.computations):
+        later_written.append(set(suffix))
+        suffix |= set(c.written())
+    later_written.reverse()
+    for i, c in enumerate(stencil.computations):
+        for s in c.statements:
+            if expr_contains_level_search(s.value):
+                return False
+            for a in s.value.accesses():
+                dk = a.offset[2]
+                if c.direction is Direction.PARALLEL:
+                    if dk != 0:
+                        return False
+                elif dk == prev:
+                    if a.offset[0] != 0 or a.offset[1] != 0:
+                        return False
+                    if a.name in later_written[i]:
+                        return False
+                elif dk != 0:
+                    return False
+    return True
+
+
+def kblocked_applies(stencil: Stencil, sched: Schedule, nk: int, *,
+                     scratch: bool = True) -> bool:
+    """THE K-blocked dispatch predicate — the single definition shared by
+    the lowering (``compile_pallas``, which passes its backend's scratch
+    capability), the footprint model (:func:`vmem_footprint`) and the cost
+    model (``model_cost``), so the model never prices a blocked kernel the
+    lowering would decline in favor of whole-column (or vice versa)."""
+    return (scratch and bool(sched.block_k) and sched.block_k < nk
+            and nk % sched.block_k == 0 and solver_k_blockable(stencil))
+
+
 def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
                    dtype_bytes: int = 4) -> int:
     """Bytes of fast on-chip memory one kernel invocation touches under this
@@ -65,17 +150,25 @@ def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
     count itself is hardware-independent; callers compare it against
     ``hw.vmem_bytes``.  K-interface buffers carry one extra level
     (they only ever appear in whole-K blocks — interface and center fields
-    never co-tile in K)."""
+    never co-tile in K).  K-blocked vertical solvers hold ``block_k`` rows
+    per field plus one carry plane per loop-carried field."""
     nk, nj, ni = dom_shape
     bi = sched.block_i or ni
     bj = sched.block_j or nj
-    whole_k = (not sched.k_as_grid or stencil.is_vertical_solver()
-               or stencil.has_interface_fields())
-    bk = nk if whole_k else (sched.block_k or nk)
+    vertical = stencil.is_vertical_solver()
+    if vertical:
+        whole_k = not kblocked_applies(stencil, sched, nk)
+        bk = nk if whole_k else sched.block_k
+    else:
+        whole_k = (not sched.k_as_grid or stencil.has_interface_fields()
+                   or stencil.has_level_search())
+        bk = nk if whole_k else (sched.block_k or nk)
     total = 0
     for name in tuple(stencil.fields) + tuple(stencil.temporaries()):
         k_size = bk + 1 if (whole_k and stencil.is_interface(name)) else bk
         total += bi * bj * k_size * dtype_bytes
+    if vertical and not whole_k:
+        total += len(solver_carried_fields(stencil)) * bi * bj * dtype_bytes
     return total
 
 
@@ -88,15 +181,33 @@ def _feasible_tpu(stencil: Stencil, dom_shape, dtype_bytes: int,
     lane, sublane = hw.lane, hw.sublane
     # interface fields (nk+1 levels) never co-tile with centers in K: any
     # K slab of mixed extents would misalign block boundaries, so interface
-    # stencils only get whole-column blocks (same rule as K offsets below)
-    k_opts = ([0] if (vertical or stencil.has_interface_fields())
-              else [1, 4, 8, 16, 0])
-    i_opts = [0] if ni <= 2 * lane else [0, lane, 2 * lane]
-    j_opts = [0, sublane, 4 * sublane, 16 * sublane]
+    # stencils only get whole-column blocks (same rule as K offsets below);
+    # level-search stencils read whole coordinate columns, same rule
+    if vertical:
+        # whole-column, plus K-blocked marching slabs where the solver
+        # admits them (single direction, one-level carries): the K grid
+        # dimension is sequential on TPU, the carry crosses block
+        # boundaries in scratch — production-depth columns fit VMEM
+        k_opts = [0]
+        if solver_k_blockable(stencil):
+            k_opts += [b for b in (4, 8, 16, 32)
+                       if b < nk and nk % b == 0]
+        # the vertical lowering holds the full horizontal window per block
+        # (halo reads need it) — never offer IJ tiles the kernel generator
+        # would silently ignore
+        i_opts, j_opts = [0], [0]
+    else:
+        k_opts = ([0] if (stencil.has_interface_fields()
+                          or stencil.has_level_search())
+                  else [1, 4, 8, 16, 0])
+        i_opts = [0] if ni <= 2 * lane else [0, lane, 2 * lane]
+        j_opts = [0, sublane, 4 * sublane, 16 * sublane]
     region_opts = ["predicated", "split"] if has_regions else ["predicated"]
     carry_opts = ["vreg", "vmem"] if vertical else ["vreg"]
     for bi, bj, bk, reg, carry in itertools.product(
             i_opts, j_opts, bk_dedup(k_opts, nk), region_opts, carry_opts):
+        if vertical and bk != 0 and carry != "vreg":
+            continue  # K-blocked marching always carries in registers
         s = Schedule(block_i=bi, block_j=bj, block_k=bk,
                      k_as_grid=not vertical, carry_storage=carry,
                      region_strategy=reg)
@@ -123,9 +234,13 @@ def _feasible_gpu(stencil: Stencil, dom_shape, dtype_bytes: int,
     warp = hw.lane
     i_opts = [w for w in (warp, 2 * warp, 4 * warp) if w <= ni] or [ni]
     j_opts = [1, 2, 4, 8]
-    # K-offset and interface stencils need whole-K blocks (same rule as
-    # TPU); otherwise small K slabs map to the thread-block z dimension
-    if vertical or stencil.has_k_offsets() or stencil.has_interface_fields():
+    # K-offset / interface / level-search stencils need whole-K blocks
+    # (same rule as TPU); otherwise small K slabs map to the thread-block z
+    # dimension.  Vertical solvers stay whole-column: the K-blocked
+    # marching schedule needs a *sequential* grid with persistent scratch,
+    # which a parallel thread-block grid cannot provide.
+    if (vertical or stencil.has_k_offsets() or stencil.has_interface_fields()
+            or stencil.has_level_search()):
         k_opts = [0]
     else:
         k_opts = bk_dedup([1, 2, 4], nk)
@@ -175,7 +290,8 @@ def default_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
     so defaulting to them would contradict ``feasible_schedules``)."""
     hw = resolve_hardware(hw)
     vertical = stencil.is_vertical_solver()
-    whole_k = vertical or stencil.has_interface_fields()
+    whole_k = (vertical or stencil.has_interface_fields()
+               or stencil.has_level_search())
     if hw.kind == "gpu":
         nk, nj, ni = dom_shape
         bi = min(ni, 4 * hw.lane)
@@ -212,11 +328,13 @@ def heuristic_schedule(stencil: Stencil, dom_shape, dtype_bytes: int = 4,
     if stencil.is_vertical_solver():
         return Schedule(block_i=0, block_j=0, block_k=0, k_as_grid=False,
                         carry_storage="vreg", region_strategy="predicated")
-    # whole-column blocks only for K-offset / interface stencils (interface
-    # and center fields never co-tile in K) — decided BEFORE the GPU branch
-    # so the fusion cost model never prices these stencils on a K slab the
+    # whole-column blocks only for K-offset / interface / level-search
+    # stencils (interface and center fields never co-tile in K; searches
+    # read whole coordinate columns) — decided BEFORE the GPU branch so the
+    # fusion cost model never prices these stencils on a K slab the
     # lowering would silently refuse
-    whole_k = stencil.has_k_offsets() or stencil.has_interface_fields()
+    whole_k = (stencil.has_k_offsets() or stencil.has_interface_fields()
+               or stencil.has_level_search())
     if hw.kind == "gpu":
         bk = 0 if whole_k else 1
         bi = min(ni, 4 * hw.lane)

@@ -31,6 +31,7 @@ from .stencil.ir import (
     Pow,
     Stencil,
     UnaryOp,
+    expr_contains_level_search,
 )
 
 
@@ -124,10 +125,24 @@ def can_otf_fuse(producer: Node, consumer: Node) -> bool:
                 for s in c.statements if s.target == f]
         if len(defs) != 1:
             return False
+        if expr_contains_level_search(defs[0].value):
+            # a level search walks absolute coordinate levels: replicating
+            # it at consumer offsets (the OTF substitution) is not a pure
+            # shift — SGF can still merge the pair into one kernel
+            return False
         for a in defs[0].value.accesses():
             if a.offset[2] != 0 or a.name in temps:
                 return False
             if a.name in cons_written:
+                return False
+    for c in consumer.stencil.computations:
+        for s in c.statements:
+            if not expr_contains_level_search(s.value):
+                continue
+            # the substitution rewrites FieldAccess nodes only; a shared
+            # field read as a search coordinate or through at_found would
+            # silently keep its pre-fusion meaning
+            if shared & {a.name for a in s.value.accesses()}:
                 return False
     return True
 

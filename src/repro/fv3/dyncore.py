@@ -15,11 +15,12 @@ Two execution modes share all stencil programs:
 Vertical remapping compiles through the stencil toolchain like everything
 else: the cumulative interface pressures and mass integrals are FORWARD
 stencils on K-interface fields, the data-dependent level search of the old
-hand-written ``jnp.interp`` path is unrolled into a data-oblivious
-piecewise-linear interpolation stencil, and the remapped means come from
-exact interface differencing (mass-conserving by construction).  Both step
-factories roll their sub-stepping loops into ``jax.lax.scan`` inside one
-jitted step — a single dispatch per physics step.
+hand-written ``jnp.interp`` path is the DSL's ``index_search`` construct
+(lowered to ``lax.fori_loop`` bisection in jnp and in-kernel marching loops
+in Pallas — O(nk) program IR at any column depth), and the remapped means
+come from exact interface differencing (mass-conserving by construction).
+Both step factories roll their sub-stepping loops into ``jax.lax.scan``
+inside one jitted step — a single dispatch per physics step.
 """
 
 from __future__ import annotations
@@ -222,14 +223,21 @@ def vertical_remap_reference(cfg: FV3Config, delp: jax.Array,
 
 
 def build_remap_program(cfg: FV3Config, dom: DomainSpec,
-                        fields: tuple[str, ...] | None = None) -> StencilProgram:
+                        fields: tuple[str, ...] | None = None, *,
+                        unrolled_interp: bool = False) -> StencilProgram:
     """First-order conservative Lagrangian→reference remap as a stencil
     program on K-interface fields: FORWARD cumulative builds of ``pe`` /
-    ``pe_ref`` and the per-field mass integrals, a data-oblivious
-    piecewise-linear interpolation onto the reference interfaces, and exact
-    interface differencing for the remapped means.  Compiling through
-    ``compile_program`` puts the remap under the pass manager, the Pallas
-    lowerings and the persistent tuning cache like every other motif.
+    ``pe_ref`` and the per-field mass integrals, the ``index_search`` level
+    search onto the reference interfaces (lowered to real loops by every
+    backend — O(nk) program IR instead of the old O(nk²) static-offset
+    unrolling), and exact interface differencing for the remapped means.
+    Compiling through ``compile_program`` puts the remap under the pass
+    manager, the Pallas lowerings and the persistent tuning cache like
+    every other motif.
+
+    ``unrolled_interp=True`` swaps the pre-construct unrolled
+    interpolation back in — the A/B baseline the trace-time benchmarks
+    compare against.
     """
     if fields is None:
         fields = ("pt", "w", "u", "v", *cfg.tracers)
@@ -244,7 +252,8 @@ def build_remap_program(cfg: FV3Config, dom: DomainSpec,
     p.add(S.column_total, {"delp": "delp", "cum": "cum", "total": "total"})
     p.add(S.reference_pe, {"total": "total", "pe_ref": "pe_ref"})
     p.add(S.remap_delp, {"pe_ref": "pe_ref", "delp_out": "delp_out"})
-    interp = S.interface_interp_stencil(cfg.nk)
+    interp = (S.interface_interp_stencil(cfg.nk) if unrolled_interp
+              else S.interface_interp)
     for q in fields:
         p.declare(q)
         p.declare(f"{q}_out")

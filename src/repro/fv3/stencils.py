@@ -323,28 +323,46 @@ def remap_field(fi: Field[interface], pe_ref: Field[interface], q_out: Field):
             / (pe_ref[0, 0, 1] - pe_ref[0, 0, 0])
 
 
-def interface_interp_stencil(nk: int, name: str = "remap_interp") -> Stencil:
+@gtstencil(name="remap_interp")
+def interface_interp(fm: Field[interface], pe: Field[interface],
+                     pe_ref: Field[interface], fi: Field[interface]):
     """Piecewise-linear interpolation of the cumulative mass ``fm`` (defined
     at the Lagrangian interfaces ``pe``) onto the reference interfaces
-    ``pe_ref`` — built programmatically because the static-offset unrolling
-    is nk-dependent.
+    ``pe_ref`` — the remap's monotone level search expressed with the DSL's
+    bounded sequential-iteration construct.
+
+    ``index_search`` selects the bracketing Lagrangian layer of each
+    reference interface (first/last layers are catch-alls, so ties and
+    float drift at the column ends extrapolate linearly); ``at_found``
+    reads the layer's bounding interfaces for the linear interpolation.
+    The backends lower the search to *real loops* — ``lax.fori_loop``
+    bisection in jnp, an in-kernel marching loop in Pallas — so the
+    stencil's IR is a constant ~20 nodes at any nk, where the unrolled
+    variant below pays O(nk²).  The slope guard only fires for
+    zero-thickness Lagrangian layers, whose mass increment is itself zero —
+    conservation is untouched.
+    """
+    with computation(PARALLEL), interval(...):
+        fi = index_search(
+            pe, pe_ref,
+            at_found(fm) + (pe_ref - at_found(pe))
+            * (at_found(fm, 1) - at_found(fm))
+            / max(at_found(pe, 1) - at_found(pe), 1e-30))
+
+
+def interface_interp_stencil(nk: int,
+                             name: str = "remap_interp_unrolled") -> Stencil:
+    """The pre-construct variant of :func:`interface_interp`, kept for A/B
+    trace-time and equivalence comparison: the level search unrolled into
+    static K offsets — built programmatically because the unrolling is
+    nk-dependent.
 
     For each target interface level ``k`` one statement (restricted to
     ``interval(k, k+1)``) selects the bracketing Lagrangian layer with a
     nested ``where`` chain over all nk source layers at *static* K offsets
-    ``s - k`` — the data-dependent level search of the hand-written
-    ``jnp.interp`` remap made data-oblivious, which is what lets the whole
-    remap run through the stencil toolchain.  The first/last layers are
-    catch-alls, so ties and float drift at the column ends extrapolate
-    linearly instead of falling out of every mask.
-
-    Cost note: the unrolling is O(nk²) IR nodes per remapped field — the
-    price of expressing the search in an algebra restricted to static
-    offsets (a bracketing bisection needs data-dependent indexing, which
-    this IR deliberately has none of).  Fine at the level counts this repo
-    runs (nk ≤ 16); production-scale columns (nk ~ 80) want a ``while``
-    construct in the DSL, the same extension GT4Py grew for exactly this
-    loop — tracked as an open item.
+    ``s - k``.  The price is O(nk²) IR nodes per remapped field — fine at
+    nk ≤ 16, a wall at production nk ~ 80, which is exactly why the DSL
+    grew ``index_search`` (the same extension GT4Py added for this loop).
     """
     stmts = []
     for k in range(nk + 1):

@@ -1,0 +1,50 @@
+"""Trace-time budget smoke check (CI gate).
+
+The sequential-K construct exists so remap trace time is O(nk), not O(nk²):
+PR 3's unrolled interpolation cost ~20 s of tracing at nk=8 and would have
+been a wall at production nk ~ 80.  This check fails CI if the nk=32 remap
+program's trace+compile time ever exceeds a *generous* threshold again —
+an O(nk²) regression cannot return silently.  The threshold is deliberately
+loose (slow CI runners must not flake) while still far below what the
+unrolled path costs at this depth.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import compile_program
+from repro.core.backend import clear_compile_cache
+from repro.fv3.dyncore import FV3Config, build_remap_program, default_params
+
+TRACE_BUDGET_S = 30.0  # generous: the search path traces in ~1 s here
+
+
+def test_nk32_remap_trace_time_within_budget():
+    cfg = FV3Config(npx=6, nk=32, halo=6, n_tracers=0)
+    dom = cfg.seq_dom()
+    prog = build_remap_program(cfg, dom, fields=("pt",))
+    rng = np.random.default_rng(0)
+    ins = {"delp": jnp.asarray(rng.uniform(0.8, 1.2, dom.padded_shape()),
+                               jnp.float32),
+           "pt": jnp.asarray(rng.uniform(0.9, 1.1, dom.padded_shape()),
+                             jnp.float32)}
+    clear_compile_cache()
+    t0 = time.perf_counter()
+    fn = compile_program(prog, "jnp")
+    jax.block_until_ready(fn(dict(ins), default_params(cfg)))
+    trace_s = time.perf_counter() - t0
+    assert trace_s < TRACE_BUDGET_S, (
+        f"nk=32 remap traced+compiled in {trace_s:.1f}s (> "
+        f"{TRACE_BUDGET_S}s budget) — an O(nk²) IR blowup is back; check "
+        "that build_remap_program still lowers the level search to loops")
+
+
+def test_remap_ir_budget_nk80():
+    """Static companion to the wall-clock gate: IR node count stays linear
+    (deterministic, immune to runner speed)."""
+    cfg = FV3Config(npx=6, nk=80, halo=6, n_tracers=0)
+    prog = build_remap_program(cfg, cfg.seq_dom(), fields=("pt",))
+    assert prog.ir_node_count() <= 25 * 80
