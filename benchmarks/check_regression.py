@@ -1,0 +1,170 @@
+"""CI perf-regression gate — deterministic metrics only.
+
+``BENCH_opt_ladder.json`` has been archived by every CI run since PR 2 but
+never *read*: a regression in kernel counts, program IR size or dispatch
+structure could land silently as long as tests stayed green.  This gate
+closes that hole.  It compares the smoke-run benchmark JSON against the
+committed ``benchmarks/baseline.json`` on metrics that are **pure functions
+of the code** — kernel counts per opt level, program IR node counts, trace
+dispatch counts, ensemble kernel invariance, and the static trace-budget
+IR size — and fails the build when any of them grows.  Wall-clock numbers
+are deliberately excluded: shared CI runners make timing non-reproducible,
+and a gate that flakes gets deleted.
+
+Usage (PYTHONPATH on *both* commands — this module imports repro for the
+static trace-budget metric)::
+
+    # CI (after `python -m benchmarks.run --smoke`):
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+    # one-command baseline refresh after an intentional change:
+    PYTHONPATH=src python -m benchmarks.run --smoke && \\
+        PYTHONPATH=src python -m benchmarks.check_regression --refresh
+
+Exit codes: 0 = green (or baseline refreshed), 1 = regression, 2 = cannot
+compare (missing/mismatched inputs — fix the setup, don't ignore it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BENCH = "BENCH_opt_ladder.json"
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+#: all gated metrics are lower-is-better integers
+
+
+def trace_budget_ir_nodes() -> int:
+    """Static companion of tests/test_trace_budget.py: the nk=80 remap
+    program's IR node count — deterministic, no execution, O(nk) by
+    construction since the ``index_search`` rewrite."""
+    from repro.fv3.dyncore import FV3Config, build_remap_program
+
+    cfg = FV3Config(npx=6, nk=80, halo=6, n_tracers=0)
+    return build_remap_program(cfg, cfg.seq_dom()).ir_node_count()
+
+
+def extract_metrics(bench: dict) -> dict[str, int]:
+    """Flatten the deterministic metrics out of a benchmark JSON."""
+    out: dict[str, int] = {}
+    for lv in bench.get("levels", []):
+        tag = f"opt_ladder.opt{lv['opt_level']}"
+        out[f"{tag}.kernels"] = lv["kernels"]
+        out[f"{tag}.transient_hbm_inputs"] = lv["transient_hbm_inputs"]
+    for e in bench.get("nk_sweep", {}).get("entries", []):
+        out[f"nk_sweep.nk{e['nk']}.ir_nodes"] = e["ir_nodes"]
+        out[f"nk_sweep.nk{e['nk']}.kernels"] = e["kernels"]
+    modes = bench.get("step_dispatch", {}).get("modes", {})
+    if "scan" in modes:
+        out["step_dispatch.scan.kernel_dispatches"] = \
+            modes["scan"]["kernel_dispatches_per_trace"]
+        out["step_dispatch.scan.n_kernels"] = modes["scan"]["n_kernels"]
+    for e in bench.get("ensemble_throughput", {}).get("entries", []):
+        m = e["members"]
+        out[f"ensemble.m{m}.csw_kernels_pallas_grid"] = \
+            e["csw_kernels_pallas_grid"]
+        out[f"ensemble.m{m}.step_kernels"] = e["step_kernels"]
+    out["trace_budget.nk80_remap_ir_nodes"] = trace_budget_ir_nodes()
+    return out
+
+
+def compare(current: dict[str, int], baseline: dict[str, int]
+            ) -> tuple[list[str], list[str], list[str]]:
+    """Returns (regressions, improvements, uncompared)."""
+    regressions, improvements, uncompared = [], [], []
+    for key, base in sorted(baseline.items()):
+        cur = current.get(key)
+        if cur is None:
+            uncompared.append(f"{key}: in baseline but missing from the "
+                              "current run")
+            continue
+        if cur > base:
+            regressions.append(f"{key}: {base} -> {cur}")
+        elif cur < base:
+            improvements.append(f"{key}: {base} -> {cur}")
+    for key in sorted(set(current) - set(baseline)):
+        uncompared.append(f"{key}: new metric (value {current[key]}); "
+                          "run --refresh to start gating it")
+    return regressions, improvements, uncompared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=DEFAULT_BENCH,
+                    help="benchmark JSON emitted by `benchmarks.run`")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline JSON")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from the current bench JSON")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_regression: cannot read {args.bench}: {e}\n"
+              "run `python -m benchmarks.run --smoke` first",
+              file=sys.stderr)
+        return 2
+    current = extract_metrics(bench)
+    config = bench.get("config", {})
+
+    if args.refresh:
+        payload = {
+            "comment": "Deterministic perf baseline for "
+                       "benchmarks/check_regression.py. Refresh: "
+                       "PYTHONPATH=src python -m benchmarks.run --smoke && "
+                       "PYTHONPATH=src python -m benchmarks.check_regression "
+                       "--refresh",
+            "config": config,
+            "metrics": current,
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline refreshed: {len(current)} metrics -> "
+              f"{args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_regression: cannot read baseline {args.baseline}: {e}",
+              file=sys.stderr)
+        return 2
+    if base.get("config") != config:
+        print("check_regression: benchmark config does not match the "
+              f"baseline's —\n  baseline: {base.get('config')}\n"
+              f"  current:  {config}\n"
+              "(the gate compares smoke runs; refresh the baseline if the "
+              "smoke config changed intentionally)", file=sys.stderr)
+        return 2
+
+    regressions, improvements, uncompared = compare(current,
+                                                    base.get("metrics", {}))
+    for line in uncompared:
+        print(f"  note: {line}")
+    for line in improvements:
+        print(f"  improved: {line}")
+    if regressions:
+        print(f"PERF REGRESSION ({len(regressions)} deterministic "
+              "metric(s) got worse):", file=sys.stderr)
+        for line in regressions:
+            print(f"  REGRESSED {line}", file=sys.stderr)
+        print("if intentional, refresh the baseline: "
+              "PYTHONPATH=src python -m benchmarks.run --smoke && "
+              "PYTHONPATH=src python -m benchmarks.check_regression "
+              "--refresh", file=sys.stderr)
+        return 1
+    print(f"perf gate green: {len(base.get('metrics', {}))} metrics, "
+          f"{len(improvements)} improved, 0 regressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,10 +12,13 @@ Every unfiltered run (smoke included; ``--only`` skips it) also emits
 ``BENCH_opt_ladder.json``: per ``opt_level`` wall time, kernel count, and
 modeled HBM traffic of the FV3 C-grid program through the automatic pass
 pipeline, a ``step_dispatch`` section comparing the scan-rolled single-jit
-model step against the old unrolled multi-dispatch loop, and an
+model step against the old unrolled multi-dispatch loop, an
 ``nk_sweep`` section tracking vertical-remap IR size / trace time / wall
-time over production column depths (nk ∈ {8, 32, 80}) — CI archives it so
-the perf trajectory of the optimizer is tracked from PR 2 onward.
+time over production column depths (nk ∈ {8, 32, 80}), and an
+``ensemble_throughput`` section (members/sec vs M, vmap-vs-grid kernel
+A/B) — CI archives it so the perf trajectory of the optimizer is tracked
+from PR 2 onward, and ``benchmarks/check_regression.py`` gates every build
+on its deterministic metrics against ``benchmarks/baseline.json``.
 """
 
 from __future__ import annotations
@@ -331,6 +334,88 @@ def step_dispatch_metric(path: str = "BENCH_opt_ladder.json",
     return lines
 
 
+def ensemble_throughput_json(path: str = "BENCH_opt_ladder.json",
+                             smoke: bool = False) -> list[str]:
+    """Ensemble scaling: members/sec of the batched step vs M, plus the
+    vmap-vs-grid lowering A/B.
+
+    Wall time comes from ``make_step_ensemble`` on the jnp backend — the
+    vmap lowering, and the only backend with native CPU execution here
+    (Pallas interpret-mode wall time measures the interpreter, not the
+    kernel).  The deterministic half of the A/B is the grid lowering's
+    kernel invariance: the grid-batched Pallas path must report the same
+    ``n_kernels`` at every M (one ``pallas_call`` per fused group, member
+    axis on the grid) — under vmap that per-call structure is XLA's
+    business, which is exactly the tradeoff the README table documents.
+    Results merge into ``path`` under ``"ensemble_throughput"``; the
+    kernel counts feed the CI regression gate.
+    """
+    import jax
+    import numpy as np
+    from repro.core import compile_program
+    from repro.fv3.dyncore import (FV3Config, build_csw_program,
+                                   make_step_ensemble)
+    from repro.fv3.state import ensemble_state
+
+    Ms = (1, 2) if smoke else (1, 2, 4, 8)
+    npx, nk = (8, 4) if smoke else (16, 8)
+    cfg = FV3Config(npx=npx, nk=nk, halo=6, n_split=1, k_split=1,
+                    n_tracers=1)
+    csw = build_csw_program(cfg, cfg.seq_dom())
+    reps = 3 if smoke else 8
+    entries = []
+    for M in Ms:
+        step = make_step_ensemble(cfg, M, opt_level=3, donate=True)
+        state = ensemble_state(cfg, M)
+        state = step(state)                       # trace + compile + warm
+        jax.block_until_ready(state)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state = step(state)
+            jax.block_until_ready(state)
+            ts.append(time.perf_counter() - t0)
+        wall = float(np.min(ts))
+        # deterministic grid-lowering invariant: same kernel count at any M
+        grid_fn = compile_program(csw, "pallas-tpu", opt_level=3,
+                                  n_members=M, batch="grid")
+        entries.append({
+            "members": M,
+            "wall_us": wall * 1e6,
+            "members_per_sec": M / wall,
+            "step_kernels": step.n_kernels,
+            "csw_kernels_pallas_grid": grid_fn.n_kernels,
+        })
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        payload = {}
+    payload["ensemble_throughput"] = {
+        "config": {"npx": npx, "nk": nk, "n_split": cfg.n_split,
+                   "k_split": cfg.k_split, "smoke": smoke, "opt_level": 3,
+                   "backend_wall": "jnp", "repeats": reps},
+        "entries": entries,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    base = entries[0]
+    lines = [
+        f"ensemble/m{e['members']},{e['wall_us']:.0f},"
+        f"members_per_sec={e['members_per_sec']:.1f};"
+        f"kernels_grid={e['csw_kernels_pallas_grid']};"
+        f"step_kernels={e['step_kernels']}"
+        for e in entries
+    ]
+    top = entries[-1]
+    lines.append(
+        f"ensemble/scaling,0,"
+        f"throughput={top['members_per_sec'] / base['members_per_sec']:.2f}x"
+        f"@M={top['members']};kernels_const="
+        f"{all(e['csw_kernels_pallas_grid'] == base['csw_kernels_pallas_grid'] for e in entries)}")
+    return lines
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -382,6 +467,14 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"nk_sweep/ERROR,0,{traceback.format_exc()[-300:]!r}",
+                  file=sys.stderr)
+        try:
+            for line in ensemble_throughput_json(args.ladder_json,
+                                                 smoke=args.smoke):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"ensemble/ERROR,0,{traceback.format_exc()[-300:]!r}",
                   file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -29,7 +29,8 @@ from .stencil.schedule import (Schedule, kblocked_applies,
 
 
 def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
-               hw: Hardware | str | None = None, dtype_bytes: int = 4) -> float:
+               hw: Hardware | str | None = None, dtype_bytes: int = 4,
+               n_members: int = 1) -> float:
     """Analytical cost of one stencil launch under a schedule.
 
     bytes/bw plus structural penalties:
@@ -39,10 +40,20 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
         per level (the §VI-A.2(3) transform removes exactly this);
       * 'split' region kernels add a launch overhead per region but shrink
         the predicated volume.
+
+    ``n_members=M`` prices the ensemble-batched kernel: data volume and
+    per-grid-step pipeline terms scale by M, but the per-``pallas_call``
+    launch overhead is paid ONCE — the member grid axis amortizes it across
+    members (M per-member dispatches would pay it M times).  Per-member
+    VMEM feasibility is unchanged (each invocation holds one member's
+    blocks), so the infeasibility checks ignore M.
     """
     hw = resolve_hardware(hw)
+    M = max(1, n_members)
     nk, nj, ni = dom.nk, dom.nj, dom.ni
-    vol = nk * (nj + 2 * dom.extend[1]) * (ni + 2 * dom.extend[0])
+    # per-member iteration volume × members: every data-traffic term below
+    # scales with M, every *feasibility* check stays per-member
+    vol = M * nk * (nj + 2 * dom.extend[1]) * (ni + 2 * dom.extend[0])
     n_fields = len(stencil.fields)
     data = n_fields * vol * dtype_bytes
     t = data / hw.hbm_bw
@@ -57,22 +68,22 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
             return float("inf")
         if kblocked_applies(stencil, sched, nk):
             bk = sched.block_k
-            # K-blocked marching: one sequential grid step per block
-            # (pipeline fill each) plus the carry planes staged through
-            # scratch at every block boundary
+            # K-blocked marching: one sequential grid step per block and
+            # member (pipeline fill each, single launch) plus the carry
+            # planes staged through scratch at every block boundary
             n_blocks = max(1, nk // bk)
             plane = (nj + 2 * dom.extend[1]) * (ni + 2 * dom.extend[0])
             carry_bytes = (len(solver_carried_fields(stencil))
                            * plane * dtype_bytes)
-            t += launch_overhead * (1 + 0.05 * (n_blocks - 1))
-            t += 2 * (n_blocks - 1) * carry_bytes / hw.hbm_bw
+            t += launch_overhead * (1 + 0.05 * (n_blocks * M - 1))
+            t += 2 * M * (n_blocks - 1) * carry_bytes / hw.hbm_bw
         else:
             if sched.carry_storage == "vmem":
                 # re-read previously written levels from VMEM→VREG each
                 # step: extra traffic ≈ one written-field plane per level
                 extra = len(stencil.written()) * vol * dtype_bytes
                 t += 0.25 * extra / hw.hbm_bw
-            t += launch_overhead
+            t += launch_overhead * (1 + 0.05 * (M - 1))
     else:
         bk = sched.block_k or nk
         n_blocks = max(1, nk // bk)
@@ -81,7 +92,7 @@ def model_cost(stencil: Stencil, sched: Schedule, dom: DomainSpec,
             bi = sched.block_i or ni
             bj = sched.block_j or nj
             n_blocks *= max(1, ni // bi) * max(1, nj // bj)
-        t += launch_overhead * (1 + 0.05 * (n_blocks - 1))
+        t += launch_overhead * (1 + 0.05 * (n_blocks * M - 1))
         if vmem_footprint(stencil, sched, (nk, nj, ni),
                           dtype_bytes) > hw.vmem_bytes:
             return float("inf")
@@ -125,6 +136,7 @@ def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
                  backend: str = "pallas-tpu",
                  measure: Callable[[Schedule], float] | None = None,
                  top_m: int = 1,
+                 n_members: int = 1,
                  cache=None) -> list[TuneResult]:
     """Exhaustive search over feasible schedules; returns top-M by cost.
 
@@ -134,6 +146,11 @@ def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
     ``measure``) hit the persistent tuning cache: the second identical
     call — even in a fresh process — skips the search.  Wall-clock
     objectives are machine-state-dependent and are never cached.
+
+    ``n_members`` enters the cost model (launch amortization across the
+    ensemble axis) and the cache key — per-member legality and VMEM are
+    M-independent, but the relative weight of per-launch overhead is not,
+    so a schedule tuned for M=1 is not automatically the M=8 winner.
     """
     from .backend import get_backend
     from .backend.cache import COST_MODEL_VERSION, default_cache, make_key
@@ -145,7 +162,7 @@ def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
     key = None
     if use_cache is not None:
         key = make_key("tune_stencil", COST_MODEL_VERSION, stencil, dom,
-                       be.name, hw.name, top_m)
+                       be.name, hw.name, top_m, n_members)
         hit = use_cache.get(key)
         if hit is not None:
             return [TuneResult(Schedule.from_dict(r["schedule"]), r["cost"],
@@ -154,7 +171,7 @@ def tune_stencil(stencil: Stencil, dom: DomainSpec, *,
     results = []
     for sched in be.feasible_schedules(stencil, (dom.nk, dom.nj, dom.ni),
                                        hardware=hw):
-        c = model_cost(stencil, sched, dom, hw)
+        c = model_cost(stencil, sched, dom, hw, n_members=n_members)
         if measure is not None and c != float("inf"):
             c = measure(sched)
         results.append(TuneResult(sched, c, 0))

@@ -7,13 +7,17 @@ benchmarks) resolves backends through :func:`get_backend` and never imports
 a lowering module directly — the pluggable-backend architecture of Devito
 and DaCe that the paper's portability claim rests on.
 
-Adding a backend:
+Adding a backend (``compile_program`` passes every keyword below on each
+compile, so the signature must accept them all — wrap the single-member
+runner in ``jax.vmap`` when asked for ``n_members`` and you have no grid
+to offer):
 
     class MyBackend(Backend):
         name = "my-target"
         default_hardware = "tpu-v5e"
         def compile_stencil(self, stencil, dom, *, schedule=None,
-                            hardware=None, interpret=True, dtype=...):
+                            hardware=None, interpret=True, dtype=...,
+                            n_members=None, batch="vmap"):
             return <callable fn(fields, params) -> dict>
 
     register_backend(MyBackend())
@@ -52,8 +56,20 @@ class Backend(abc.ABC):
     def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
                         schedule: Schedule | None = None,
                         hardware: Hardware | str | None = None,
-                        interpret: bool = True, dtype=None) -> Runner:
-        """Lower one stencil into ``fn(fields, params) -> dict``."""
+                        interpret: bool = True, dtype=None,
+                        n_members: int | None = None,
+                        batch: str = "vmap") -> Runner:
+        """Lower one stencil into ``fn(fields, params) -> dict``.
+
+        ``n_members=M`` compiles an ensemble-batched runner: every field
+        carries a leading member axis of extent M.  ``batch`` selects the
+        lowering of that axis — ``"vmap"`` wraps the single-member runner
+        in :func:`jax.vmap` (the jnp backend's only strategy: XLA owns the
+        mapping); ``"grid"`` asks the backend to place members on its own
+        launch structure (the Pallas backends prepend an outermost
+        sequential grid axis).  Backends without a grid notion treat
+        ``"grid"`` as ``"vmap"``.
+        """
 
     # -- schedule policy (hardware-parameterized, overridable) ---------------
     def feasible_schedules(self, stencil: Stencil, dom_shape,

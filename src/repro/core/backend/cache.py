@@ -38,8 +38,11 @@ _CACHE_VERSION = 1
 #: vmem_footprint/node_bytes and whole-K-only schedules for staggered
 #: stencils.  v5: sequential-K — K-blocked marching schedules for vertical
 #: solvers with carry-plane footprints, whole-column VMEM feasibility
-#: enforced in model_cost, and level-search marching FLOPs in node_flops.)
-COST_MODEL_VERSION = 5
+#: enforced in model_cost, and level-search marching FLOPs in node_flops.
+#: v6: ensemble axis — model_cost takes n_members and amortizes the
+#: per-launch overhead across the member grid dimension; tuning keys carry
+#: n_members.)
+COST_MODEL_VERSION = 6
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:

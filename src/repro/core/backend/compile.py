@@ -77,23 +77,33 @@ def compile_stencil(stencil, dom, *, backend: "str | Backend" = "jnp",
                     schedule: Schedule | None = None,
                     hardware: Hardware | str | None = None,
                     interpret: bool = True, dtype=None,
-                    memoize: bool = True) -> Callable:
-    """Compile one stencil through a registered backend (memoized)."""
+                    memoize: bool = True,
+                    n_members: int | None = None,
+                    batch: str = "vmap") -> Callable:
+    """Compile one stencil through a registered backend (memoized).
+
+    ``n_members``/``batch`` select the ensemble lowering (see
+    :meth:`Backend.compile_stencil`); both are part of the memo key — a
+    member-batched runner accepts different shapes than a single-member one.
+    """
     be = get_backend(backend)
     hw = be.resolve_hw(hardware)
     if not memoize:
         return be.compile_stencil(stencil, dom, schedule=schedule,
                                   hardware=hw, interpret=interpret,
-                                  dtype=dtype)
+                                  dtype=dtype, n_members=n_members,
+                                  batch=batch)
     key = (stencil_fingerprint(stencil), dom,
            None if schedule is None else dataclasses.astuple(schedule),
-           be.name, hw.name, interpret, None if dtype is None else str(dtype))
+           be.name, hw.name, interpret, None if dtype is None else str(dtype),
+           n_members, batch if n_members else None)
     runner = _runner_memo.get(key)
     if runner is None:
         _runner_stats.misses += 1
         runner = be.compile_stencil(stencil, dom, schedule=schedule,
                                     hardware=hw, interpret=interpret,
-                                    dtype=dtype)
+                                    dtype=dtype, n_members=n_members,
+                                    batch=batch)
         _runner_memo[key] = runner
     else:
         _runner_stats.hits += 1
@@ -144,7 +154,9 @@ def compile_program(program: "StencilProgram",
                     schedule_overrides: Mapping[str, Schedule] | None = None,
                     interpret: bool = True,
                     donate: bool = False,
-                    opt_level: int = 0) -> Callable:
+                    opt_level: int = 0,
+                    n_members: int | None = None,
+                    batch: str = "vmap") -> Callable:
     """Compile a whole :class:`StencilProgram` into one functional callable
     ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
@@ -163,13 +175,25 @@ def compile_program(program: "StencilProgram",
     instead of triggering per-call XLA warnings (see
     :func:`donation_supported`).
 
+    ``n_members=M`` threads an ensemble/member axis through the whole
+    pipeline: every program field gains a leading axis of extent M, the
+    optimizer's cost model amortizes launch overhead across members, and
+    each backend lowers the axis per ``batch`` — ``"vmap"`` wraps runners
+    in :func:`jax.vmap` (the jnp strategy; XLA owns the mapping), ``"grid"``
+    places members on the backend's launch structure (Pallas: outermost
+    sequential grid axis, same kernel count as M=1).  The batch dimension
+    is a compilation-layer decision, not a per-stencil rewrite.
+
     The returned callable exposes introspection attributes:
     ``n_kernels`` (number of compiled runners), ``opt_report`` (the
     :class:`~repro.core.passes.PipelineReport`, ``None`` at level 0),
     ``program`` (the graph actually lowered), ``input_fields`` and
     ``transient_inputs`` (fields auto-allocated when the caller omits
-    them — empty of transients once fusion has localized them).
+    them — empty of transients once fusion has localized them), plus
+    ``n_members`` / ``batch`` describing the ensemble lowering.
     """
+    if batch not in ("vmap", "grid"):
+        raise ValueError(f"batch must be 'vmap' or 'grid', got {batch!r}")
     be = get_backend(backend)
     hw = be.resolve_hw(hardware)
     opt_report = None
@@ -177,14 +201,16 @@ def compile_program(program: "StencilProgram",
         from ..passes import optimize_program
 
         program, opt_report = optimize_program(
-            program, opt_level=opt_level, backend=be.name, hardware=hw)
+            program, opt_level=opt_level, backend=be.name, hardware=hw,
+            n_members=n_members or 1)
     runners = []
     for s in program.states:
         for n in s.nodes:
             dom = program.node_dom(n)
             sched = _resolve_override(n, schedule_overrides)
             r = compile_stencil(n.stencil, dom, backend=be, schedule=sched,
-                                hardware=hw, interpret=interpret)
+                                hardware=hw, interpret=interpret,
+                                n_members=n_members, batch=batch)
             runners.append((n, r))
 
     fields_decl = program.fields
@@ -203,7 +229,9 @@ def compile_program(program: "StencilProgram",
                 # zero from an input keeps shard_map's manual-axes (VMA)
                 # tracking consistent inside scan carries.
                 decl = fields_decl[name]
-                z = jnp.zeros(dom.padded_shape(decl.interface), decl.dtype)
+                lead = (n_members,) if n_members else ()
+                z = jnp.zeros(lead + dom.padded_shape(decl.interface),
+                              decl.dtype)
                 if template is not None:
                     z = z + (template.ravel()[0] * 0).astype(decl.dtype)
                 env[name] = z
@@ -229,6 +257,8 @@ def compile_program(program: "StencilProgram",
             return jitted(fields, params)
 
     fn.n_kernels = len(runners)
+    fn.n_members = n_members
+    fn.batch = batch if n_members else None
     fn.opt_report = opt_report
     fn.program = program
     fn.input_fields = tuple(inputs)

@@ -2,11 +2,14 @@
 
 Schedules are accepted and ignored: XLA owns all mapping decisions.  This is
 the debuggable ground truth every other backend validates against (the
-paper's sequential/debug backend role).
+paper's sequential/debug backend role).  The ensemble/member axis lowers via
+``jax.vmap`` here regardless of the requested ``batch`` mode — there is no
+grid to place members on; batching is XLA's decision like everything else.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..hardware import Hardware
@@ -24,8 +27,13 @@ class JnpBackend(Backend):
     def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
                         schedule: Schedule | None = None,
                         hardware: Hardware | str | None = None,
-                        interpret: bool = True, dtype=None) -> Runner:
-        return compile_jnp(stencil, dom, dtype=dtype or jnp.float32)
+                        interpret: bool = True, dtype=None,
+                        n_members: int | None = None,
+                        batch: str = "vmap") -> Runner:
+        fn = compile_jnp(stencil, dom, dtype=dtype or jnp.float32)
+        if n_members:
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn
 
 
 register_backend(JnpBackend())

@@ -15,6 +15,13 @@ Schedules map onto Pallas as follows (paper §V-A ↔ TPU):
    the full-domain kernel; ``'split'`` emits a separate kernel writing only
    the region's bounding box (paper Table III: "Split regions to multiple
    kernels").
+ * ensemble members (``n_members=M``): the member axis becomes the
+   *outermost sequential grid axis* — every BlockSpec gains a squeezed
+   (``None``) leading member dimension whose index map passes the member
+   grid index through, so each invocation still sees exactly the blocks it
+   would see at M=1.  Schedules, legality and per-invocation VMEM footprint
+   are unchanged per member; one ``pl.pallas_call`` serves all M members
+   (launch overhead amortized — the cost model prices this).
 
 Kernels are validated in ``interpret=True`` mode on CPU against the jnp
 oracle; on real TPUs the same ``pl.pallas_call`` lowers to Mosaic.
@@ -163,6 +170,27 @@ def _eval_block(e: Expr, read, params, read_col=None, nk=None, found=None):
     raise TypeError(e)
 
 
+def _member_index_map(imap, m, *grid):
+    """Index map of a memberized BlockSpec: member grid index first (block
+    index 0 along the squeezed member dim), then the base map's blocks."""
+    return (m,) + tuple(imap(*grid))
+
+
+def _member_specs(specs):
+    """Prepend a squeezed (``None``) member block dimension to every array
+    BlockSpec; scalar-param specs (``memory_space=ANY``, no block shape) are
+    broadcast across members and pass through untouched."""
+    out = []
+    for spec in specs:
+        if spec.block_shape is None:
+            out.append(spec)
+            continue
+        out.append(pl.BlockSpec(
+            (None,) + tuple(spec.block_shape),
+            functools.partial(_member_index_map, spec.index_map)))
+    return out
+
+
 def _hwindow(dom: DomainSpec, dj: int, di: int):
     """Static (j, i) slices of the extended write window shifted by offset."""
     ei, ej = dom.extend
@@ -276,7 +304,7 @@ def _inline_offset_temps(stencil: Stencil) -> Stencil:
 
 
 def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
-                       statements, param_names):
+                       statements, param_names, gaxis: int = 0):
     written = [w for w in stencil.written() if w in stencil.fields]
     fields = list(stencil.fields)
     temps = stencil.temporaries()
@@ -302,7 +330,9 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
         for w in written:
             out_refs[w][...] = in_refs[w][...]
         env: dict[str, Any] = {}
-        pid = pl.program_id(0) if not whole_k else 0
+        # gaxis: the K grid axis shifts right by one when a member grid
+        # axis is prepended (ensemble batching)
+        pid = pl.program_id(gaxis) if not whole_k else 0
         k0 = pid * bk
 
         def make_read(rows):
@@ -541,7 +571,7 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 
 def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
-                              sched: Schedule, param_names):
+                              sched: Schedule, param_names, gaxis: int = 0):
     """K-blocked marching schedule for single-direction vertical solvers.
 
     The TPU grid executes *sequentially*, so the K dimension becomes a grid
@@ -581,9 +611,12 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
         for w in written:
             out_refs[w][...] = in_refs[w][...]
 
-        g = pl.program_id(0)
+        g = pl.program_id(gaxis)
         # grid step g is the g-th block in *marching order*; the index maps
-        # place it top-down (FORWARD) or bottom-up (BACKWARD)
+        # place it top-down (FORWARD) or bottom-up (BACKWARD).  Under a
+        # member grid axis (gaxis=1) g still runs 0..n_blocks-1 *per
+        # member*, so the first-block carry zeroing below resets at every
+        # member boundary — no carry leaks between members.
         blk = g if forward else (n_blocks - 1 - g)
         k0 = blk * bk
 
@@ -664,18 +697,27 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
 
 
 def _compile_kblocked(stencil: Stencil, dom: DomainSpec, sched: Schedule,
-                      param_names, dtype, interpret: bool):
+                      param_names, dtype, interpret: bool,
+                      n_members: int | None = None):
     kernel, grid, in_specs, out_specs, written, temps, carried = \
-        _vertical_kernel_kblocked(stencil, dom, sched, param_names)
+        _vertical_kernel_kblocked(stencil, dom, sched, param_names,
+                                  gaxis=1 if n_members else 0)
     njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
     shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
     # temporaries hold only the current block's rows; carry planes persist
-    # across the sequential grid — both VMEM scratch, never HBM
+    # across the sequential grid — both VMEM scratch, never HBM.  Per-member
+    # scratch needs no member axis: the member grid axis is outermost and
+    # sequential, and the carry zeroes itself at each member's first block.
     scratch = ([pltpu.VMEM((sched.block_k, njp, nip), dtype) for _ in temps] +
                [pltpu.VMEM(shape2d, dtype) for _ in carried])
+    if n_members:
+        grid = (n_members,) + grid
+        in_specs = _member_specs(in_specs)
+        out_specs = _member_specs(out_specs)
+    lead = (n_members,) if n_members else ()
 
     def shape_of(name):
-        return dom.padded_shape(stencil.is_interface(name))
+        return lead + dom.padded_shape(stencil.is_interface(name))
 
     def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
         params = dict(params or {})
@@ -701,7 +743,8 @@ def _compile_kblocked(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
                    schedule: Schedule | None = None, dtype=jnp.float32,
-                   interpret: bool = True, scratch_temps: bool = True):
+                   interpret: bool = True, scratch_temps: bool = True,
+                   n_members: int | None = None):
     """Compile a stencil into a Pallas-backed functional callable.
 
     ``interpret=True`` executes on CPU for validation; on TPU pass False.
@@ -709,12 +752,19 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
     scratch (never materialized in HBM); the GPU backend passes False —
     the TPU memory-space spec does not exist in the Triton lowering — and
     falls back to temporaries as extra outputs.
+
+    ``n_members=M`` batches M ensemble members through ONE ``pallas_call``
+    per kernel: fields gain a leading member axis, the grid gains an
+    outermost *sequential* member dimension, and every BlockSpec maps the
+    member grid index onto a squeezed leading block dim — the kernel body
+    is untouched and per-member blocks/VMEM are identical to M=1.
     """
     sched = schedule or default_schedule(stencil, (dom.nk, dom.nj, dom.ni))
     param_names = list(stencil.params)
+    lead = (n_members,) if n_members else ()
 
     def shape_of(name):
-        return dom.padded_shape(stencil.is_interface(name))
+        return lead + dom.padded_shape(stencil.is_interface(name))
 
     if (stencil.is_vertical_solver()
             and kblocked_applies(stencil, sched, dom.nk,
@@ -724,7 +774,7 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
         # scratch (the GPU backend's parallel thread-block grid cannot
         # order blocks, so it never enumerates this schedule).
         return _compile_kblocked(stencil, dom, sched, param_names, dtype,
-                                 interpret)
+                                 interpret, n_members=n_members)
 
     if stencil.is_vertical_solver():
         kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(
@@ -734,11 +784,17 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
         # the same positions temporaries-as-outputs occupy, so the kernel
         # body is agnostic to which mechanism backs them
         if scratch_temps:
-            scratch = [pltpu.VMEM(shape_of(t), dtype) for t in temps]
+            scratch = [pltpu.VMEM(dom.padded_shape(stencil.is_interface(t)),
+                                  dtype) for t in temps]
         else:
             scratch = []
             out_specs = out_specs + [
-                pl.BlockSpec(shape_of(t), lambda _: (0, 0, 0)) for t in temps]
+                pl.BlockSpec(dom.padded_shape(stencil.is_interface(t)),
+                             lambda _: (0, 0, 0)) for t in temps]
+        if n_members:
+            grid = (n_members,) + grid
+            in_specs = _member_specs(in_specs)
+            out_specs = _member_specs(out_specs)
 
         def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
             params = dict(params or {})
@@ -773,7 +829,12 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
     compiled = []
     for grp in groups:
         kernel, grid, in_specs, out_specs, written, bk = _horizontal_kernel(
-            stencil, dom, sched, grp, param_names)
+            stencil, dom, sched, grp, param_names,
+            gaxis=1 if n_members else 0)
+        if n_members:
+            grid = (n_members,) + grid
+            in_specs = _member_specs(in_specs)
+            out_specs = _member_specs(out_specs)
         compiled.append((kernel, grid, in_specs, out_specs, written))
 
     def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):

@@ -11,6 +11,8 @@ feasibility, defaults and heuristics against its own hardware descriptor
 
 from __future__ import annotations
 
+import jax
+
 from ..hardware import Hardware
 from ..stencil.domain import DomainSpec
 from ..stencil.ir import Stencil
@@ -30,14 +32,25 @@ class PallasTPUBackend(Backend):
     def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
                         schedule: Schedule | None = None,
                         hardware: Hardware | str | None = None,
-                        interpret: bool = True, dtype=None) -> Runner:
+                        interpret: bool = True, dtype=None,
+                        n_members: int | None = None,
+                        batch: str = "grid") -> Runner:
         if schedule is None:
             schedule = self.default_schedule(
                 stencil, (dom.nk, dom.nj, dom.ni), hardware)
         kwargs = {} if dtype is None else {"dtype": dtype}
+        if n_members and batch == "vmap":
+            # A/B baseline against the member grid axis: the single-member
+            # kernel under jax.vmap (pallas_call's batching rule prepends
+            # its own grid dimension)
+            fn = compile_pallas(stencil, dom, schedule=schedule,
+                                interpret=interpret,
+                                scratch_temps=self.scratch_temps, **kwargs)
+            return jax.vmap(fn, in_axes=(0, None))
         return compile_pallas(stencil, dom, schedule=schedule,
                               interpret=interpret,
-                              scratch_temps=self.scratch_temps, **kwargs)
+                              scratch_temps=self.scratch_temps,
+                              n_members=n_members, **kwargs)
 
 
 class PallasGPUBackend(PallasTPUBackend):

@@ -227,7 +227,9 @@ class StencilProgram:
     # -- execution ---------------------------------------------------------------
     def compile(self, backend: str = "jnp", *, hardware=None,
                 schedule_overrides=None, interpret: bool = True,
-                donate: bool = False, opt_level: int = 0) -> Callable:
+                donate: bool = False, opt_level: int = 0,
+                n_members: int | None = None,
+                batch: str = "vmap") -> Callable:
         """Compile the whole program into one functional callable
         ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
@@ -242,7 +244,8 @@ class StencilProgram:
         return compile_program(self, backend, hardware=hardware,
                                schedule_overrides=schedule_overrides,
                                interpret=interpret, donate=donate,
-                               opt_level=opt_level)
+                               opt_level=opt_level, n_members=n_members,
+                               batch=batch)
 
     def __repr__(self):
         lines = [f"program {self.name}: {len(self.all_nodes())} nodes, "

@@ -62,12 +62,15 @@ MAX_OPT_LEVEL = max(OPT_LADDERS)
 
 @dataclasses.dataclass
 class PassContext:
-    """Everything a pass may consult: the compilation target and the
-    persistent tuning cache (``None`` → the process default)."""
+    """Everything a pass may consult: the compilation target, the ensemble
+    width the program will be batched over (launch-overhead amortization in
+    the schedule tuner's cost model) and the persistent tuning cache
+    (``None`` → the process default)."""
 
     backend: str = "jnp"
     hardware: Hardware | str | None = None
     cache: object | None = None
+    n_members: int = 1
 
     def hw(self) -> Hardware:
         return resolve_hardware(self.hardware)
@@ -267,7 +270,7 @@ def _tune_schedules(program: StencilProgram, ctx: PassContext) -> int:
     for node in program.all_nodes():
         dom = program.node_dom(node)
         results = tune_stencil(node.stencil, dom, hw=hw, backend=ctx.backend,
-                               cache=ctx.cache)
+                               n_members=ctx.n_members, cache=ctx.cache)
         if results and results[0].cost != float("inf"):
             node.schedule = results[0].schedule
             n += 1
@@ -291,6 +294,7 @@ def optimize_program(program: StencilProgram, *, opt_level: int = 3,
                      cache=None,
                      passes: tuple[str, ...] | None = None,
                      inplace: bool = False,
+                     n_members: int = 1,
                      ) -> tuple[StencilProgram, PipelineReport]:
     """Run the opt ladder for ``opt_level`` (or an explicit ``passes`` list)
     over a clone of ``program``; returns ``(optimized, report)``.
@@ -305,7 +309,8 @@ def optimize_program(program: StencilProgram, *, opt_level: int = 3,
         opt_level=opt_level, backend=backend, hardware=hw.name,
         kernels_before=len(prog.all_nodes()),
         hbm_bytes_before=program_bytes(prog))
-    ctx = PassContext(backend=backend, hardware=hw, cache=cache)
+    ctx = PassContext(backend=backend, hardware=hw, cache=cache,
+                      n_members=max(1, n_members))
     for name in names:
         fn = get_pass(name)
         t0 = time.perf_counter()

@@ -340,15 +340,18 @@ def _build_programs(cfg: FV3Config, dom: DomainSpec):
 
 
 def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
-                   opt_level: int, hardware=None):
+                   opt_level: int, hardware=None,
+                   n_members: int | None = None, batch: str = "vmap"):
     """Build the four stencil programs (acoustic c_sw / d_sw, tracer
     transport, vertical remap) and compile each through the automatic
     optimization ladder (the paper's opt pipeline applies to the whole
-    dycore — remap included — with no per-program hand-tuning)."""
+    dycore — remap included — with no per-program hand-tuning).
+    ``n_members``/``batch`` thread the ensemble axis into every program."""
     progs = _build_programs(cfg, dom)
     runners = tuple(
         compile_program(p, backend, hardware=hardware, interpret=True,
-                        opt_level=opt_level)
+                        opt_level=opt_level, n_members=n_members,
+                        batch=batch)
         for p in progs)
     return progs, runners
 
@@ -416,6 +419,35 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state, metrics,
 REMAP_FIELDS = ("pt", "w", "u", "v")
 
 
+def _reference_halo_fn(cfg: FV3Config):
+    """Sequential-mode halo update over global tile arrays.  The reference
+    exchange addresses the tile axis at -4, so the same closure serves
+    (6, nk, J, I) single-member state and (M, 6, nk, J, I) ensembles —
+    the batched exchange is the per-member one, bit for bit."""
+    def halo_fn(st, names):
+        vec = [("u", "v")] if ("u" in names and "v" in names) else []
+        ex = {k: st[k] for k in names if k not in ("u", "v")}
+        if vec:
+            ex["u"], ex["v"] = st["u"], st["v"]
+        out = exchange_reference(ex, cfg.halo, vector_pairs=vec)
+        return {**st, **out}
+
+    return halo_fn
+
+
+def _counting_tile_runner(run, counters, axis: int = 0):
+    """vmap a compiled runner over the tile axis (``axis`` 0 for
+    (6, nk, J, I) state, 1 when a member axis leads) and count Python-level
+    dispatches for the instrumentation tests."""
+    vmapped = jax.vmap(run, in_axes=(axis, None), out_axes=axis)
+
+    def counting(fields, ps):
+        counters["runner_dispatches"] += 1
+        return vmapped(fields, ps)
+
+    return counting
+
+
 def _scan_substeps(body, st, n, unroll):
     """Run ``body`` n times over the state dict: ``lax.scan``-rolled by
     default (the body is traced once and compiled once, regardless of n —
@@ -471,6 +503,37 @@ def _remap_iteration(cfg, runners, params, halo_fn, state, metrics,
     return st
 
 
+def _assemble_step(cfg: FV3Config, progs, runners, runners_v, halo_fn,
+                   metrics, params, counters, *, unroll: bool,
+                   donate: bool) -> Callable:
+    """Shared tail of the sequential/ensemble step factories: the
+    scan-rolled remap loop behind one jit, with counters and the standard
+    introspection attributes.  Keeping this in one place is what keeps the
+    ensemble and single-member paths bit-identical by construction."""
+    def _step(state: dict) -> dict:
+        def remap_body(st):
+            return _remap_iteration(cfg, runners_v, params, halo_fn, st,
+                                    metrics, unroll=unroll,
+                                    counters=counters)
+
+        return _scan_substeps(remap_body, dict(state), cfg.k_split, unroll)
+
+    jitted = (jax.jit(_step, donate_argnums=(0,))
+              if donate and donation_supported() else jax.jit(_step))
+
+    @functools.wraps(_step)
+    def step(state: dict) -> dict:
+        counters["step_calls"] += 1
+        return jitted(state)
+
+    step.counters = counters
+    step.opt_report = {p.name: r.opt_report for p, r in zip(progs, runners)}
+    step.n_kernels = sum(r.n_kernels for r in runners)
+    step.programs = progs
+    step.unrolled = unroll
+    return step
+
+
 def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
                          hardware=None, optimize: bool = True,
                          opt_level: int | None = None,
@@ -504,50 +567,59 @@ def make_step_sequential(cfg: FV3Config, *, backend: str = "jnp",
     params = default_params(cfg)
     counters = {"acoustic_traces": 0, "runner_dispatches": 0,
                 "step_calls": 0}
-
-    def halo_fn(st, names):
-        vec = [("u", "v")] if ("u" in names and "v" in names) else []
-        ex = {k: st[k] for k in names if k not in ("u", "v")}
-        if vec:
-            ex["u"], ex["v"] = st["u"], st["v"]
-        out = exchange_reference(ex, cfg.halo, vector_pairs=vec)
-        return {**st, **out}
-
-    def tile_runner(run):
-        vmapped = jax.vmap(run, in_axes=(0, None))
-
-        def counting(fields, ps):
-            counters["runner_dispatches"] += 1
-            return vmapped(fields, ps)
-
-        return counting
-
-    runners_v = tuple(tile_runner(r) for r in runners)
+    runners_v = tuple(_counting_tile_runner(r, counters) for r in runners)
     # cosa/sina hoisted out of the scan body: constants are built once per
     # step closure, not re-materialized every acoustic substep
     metrics = _metric_terms(cfg, (6,) + dom.padded_shape())
+    return _assemble_step(cfg, progs, runners, runners_v,
+                          _reference_halo_fn(cfg), metrics, params, counters,
+                          unroll=unroll, donate=donate)
 
-    def _step(state: dict) -> dict:
-        def remap_body(st):
-            return _remap_iteration(cfg, runners_v, params, halo_fn, st,
-                                    metrics, unroll=unroll,
-                                    counters=counters)
 
-        return _scan_substeps(remap_body, dict(state), cfg.k_split, unroll)
+def make_step_ensemble(cfg: FV3Config, n_members: int, *,
+                       backend: str = "jnp", hardware=None,
+                       optimize: bool = True, opt_level: int | None = None,
+                       batch: str | None = None,
+                       unroll: bool = False,
+                       donate: bool = False) -> Callable:
+    """Ensemble physics step: M perturbed members on one device, state laid
+    out ``(M, 6, nk, npx+2h, npx+2h)`` (member outermost).
 
-    jitted = (jax.jit(_step, donate_argnums=(0,))
-              if donate and donation_supported() else jax.jit(_step))
+    This is :func:`make_step_sequential`'s scan-rolled step with the member
+    axis threaded through the whole toolchain instead of a Python loop over
+    members: every stencil program compiles once via
+    ``compile_program(..., n_members=M, batch=...)`` (jnp lowers the axis
+    with ``jax.vmap``; the Pallas backends place members on the outermost
+    sequential grid axis — same kernel count as M=1), and the halo exchange
+    runs *batched* — the reference gathers carry the member axis like the
+    distributed ppermute rounds carry arbitrary leading dims.  The result
+    is bit-identical to M independent sequential steps at every opt level;
+    what changes is dispatch structure: one jitted step, one kernel per
+    fused group, launch overhead amortized across members.
 
-    @functools.wraps(_step)
-    def step(state: dict) -> dict:
-        counters["step_calls"] += 1
-        return jitted(state)
-
-    step.counters = counters
-    step.opt_report = {p.name: r.opt_report for p, r in zip(progs, runners)}
-    step.n_kernels = sum(r.n_kernels for r in runners)
-    step.programs = progs
-    step.unrolled = unroll
+    ``batch`` defaults per backend ("vmap" for jnp, "grid" for Pallas).
+    """
+    if batch is None:
+        batch = "grid" if str(backend).startswith("pallas") else "vmap"
+    dom = cfg.seq_dom()
+    progs, runners = _make_programs(cfg, dom, backend,
+                                    _resolve_opt_level(optimize, opt_level),
+                                    hardware, n_members=n_members,
+                                    batch=batch)
+    params = default_params(cfg)
+    counters = {"acoustic_traces": 0, "runner_dispatches": 0,
+                "step_calls": 0}
+    # member-batched runners take (M, nk, J, I): tiles vmap over axis 1
+    runners_v = tuple(_counting_tile_runner(r, counters, axis=1)
+                      for r in runners)
+    base_metrics = _metric_terms(cfg, (6,) + dom.padded_shape())
+    metrics = {k: jnp.broadcast_to(v, (n_members,) + v.shape)
+               for k, v in base_metrics.items()}
+    step = _assemble_step(cfg, progs, runners, runners_v,
+                          _reference_halo_fn(cfg), metrics, params, counters,
+                          unroll=unroll, donate=donate)
+    step.n_members = n_members
+    step.batch = batch
     return step
 
 
@@ -555,14 +627,23 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
                           hardware=None, optimize: bool = True,
                           opt_level: int | None = None,
                           ensemble: bool = False,
+                          member_axis: str | None = None,
                           overlap: bool = True,
                           unroll: bool = False) -> Callable:
     """shard_map'd physics step over mesh ("tile","y","x") — or, multi-pod,
-    ("ens","tile","y","x") with independent ensemble members (the NWP
+    (member, "tile","y","x") with independent ensemble members (the NWP
     production multi-pod workload).
 
+    ``member_axis`` names an extra *leading* mesh axis members shard over,
+    orthogonally to the ``tile/y/x`` domain decomposition — each member
+    group runs an independent dycore; no collective ever crosses the member
+    axis (the halo ppermutes name only ``tile/y/x``).  The mesh's member
+    extent must equal the ensemble size (one member per member-group).
+    The legacy ``ensemble=True`` flag is shorthand for
+    ``member_axis="ens"``.
+
     Input state: per-rank local blocks laid out
-    ([ens,] tile, y, x, nk, nl+2h, nl+2h).
+    ([member,] tile, y, x, nk, nl+2h, nl+2h).
 
     ``overlap=True`` hides halo-exchange latency by splitting each exchanged
     program's domain (:mod:`repro.fv3.overlap`): interior compute runs from
@@ -572,6 +653,9 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     too small (``n_local <= 2*halo``) to hold a strip-free core.
     """
     from jax.sharding import PartitionSpec as P
+
+    if ensemble and member_axis is None:
+        member_axis = "ens"
 
     dom = cfg.local_dom()
     dec = cfg.decomposition()
@@ -611,7 +695,7 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         out = exchanger(ex, vector_pairs=vec)
         return {**st, **out}
 
-    lead = 4 if ensemble else 3
+    lead = 4 if member_axis else 3
     metrics = _metric_terms(cfg, dom.padded_shape())
 
     def local_step(state: dict) -> dict:
@@ -626,7 +710,8 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         return {k: v.reshape((1,) * lead + (nk, nl + 2 * h, nl + 2 * h))
                 for k, v in st.items()}
 
-    spec = P("ens", "tile", "y", "x") if ensemble else P("tile", "y", "x")
+    spec = (P(member_axis, "tile", "y", "x") if member_axis
+            else P("tile", "y", "x"))
     fields = all_state_fields(cfg)
     from repro.jaxcompat import shard_map
 

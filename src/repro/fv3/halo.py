@@ -95,7 +95,13 @@ def _vec_mats(N: int, h: int):
 
 def exchange_reference(fields: Mapping[str, Array], halo: int,
                        vector_pairs: Sequence[tuple[str, str]] = ()) -> dict:
-    """Fill ghosts of global ``(6, nk, N+2h, N+2h)`` fields."""
+    """Fill ghosts of global ``([lead...,] 6, nk, N+2h, N+2h)`` fields.
+
+    The tile axis sits at ``-4`` and the spatial axes at ``-2``/``-1``, so
+    arbitrary *leading* batch dimensions — an ensemble/member axis — ride
+    through every gather untouched: one batched exchange is bit-identical
+    to per-member exchanges (the ensemble tests assert exactly this).
+    """
     names = list(fields)
     arrs = {n: jnp.asarray(fields[n]) for n in names}
     some = arrs[names[0]]
@@ -103,22 +109,27 @@ def exchange_reference(fields: Mapping[str, Array], halo: int,
     pass1, pass2 = _gather_indices(N, halo)
     vecs = {n: p for p in vector_pairs for n in p}
 
+    def gather(arr, g, sj, si):
+        # (lead..., nk, T, D): adjacent advanced indices (sj, si) replace
+        # the spatial axes in place
+        return jnp.take(arr, g, axis=-4)[..., sj, si]
+
     def fill(arrs, entries, edges):
         out = dict(arrs)
         for (f, g, gj, gi, sj, si), e in zip(entries, edges):
             for n in names:
-                src = arrs[n][g][:, sj, si]
+                src = gather(arrs[n], g, sj, si)
                 if n in vecs:
                     pair = next(p for p in vector_pairs if n in p)
                     M = np.array(LINKS[(f, e)].vec2x2)
-                    uu = arrs[pair[0]][g][:, sj, si]
-                    vv = arrs[pair[1]][g][:, sj, si]
+                    uu = gather(arrs[pair[0]], g, sj, si)
+                    vv = gather(arrs[pair[1]], g, sj, si)
                     row = 0 if n == pair[0] else 1
                     src = M[row, 0] * uu + M[row, 1] * vv
                 # advanced indices (f, gj, gi) are non-contiguous → result
-                # dims move to front: provide (T, D, nk)
-                out[n] = out[n].at[f, :, gj, gi].set(
-                    jnp.moveaxis(src, 0, -1).astype(out[n].dtype))
+                # dims move to front: provide (T, D, lead..., nk)
+                out[n] = out[n].at[..., f, :, gj, gi].set(
+                    jnp.moveaxis(src, (-2, -1), (0, 1)).astype(out[n].dtype))
         return out
 
     edges1 = [e for f in range(6) for e in ("W", "E")]
@@ -134,42 +145,52 @@ def exchange_reference(fields: Mapping[str, Array], halo: int,
 
 
 def _extract(arr: Array, edge: str, h: int, nl: int, full_width: bool) -> Array:
-    """Sender-side oriented strip: axes (k, t, d), d=0 nearest boundary,
-    t in the sender's increasing along-edge parameter."""
+    """Sender-side oriented strip: axes (..., t, d), d=0 nearest boundary,
+    t in the sender's increasing along-edge parameter.
+
+    Spatial axes are addressed from the end, so any leading dims (k alone,
+    or member × k for a batched ensemble exchange) pass straight through —
+    the ppermute rounds carry arbitrary leading dimensions."""
     lo, hi = (0, nl + 2 * h) if full_width else (h, h + nl)
     if edge == "W":
-        s = arr[:, lo:hi, h:2 * h]                       # (k, t, d)
+        s = arr[..., lo:hi, h:2 * h]                     # (..., t, d)
     elif edge == "E":
-        s = jnp.flip(arr[:, lo:hi, nl:nl + h], axis=2)
+        s = jnp.flip(arr[..., lo:hi, nl:nl + h], axis=-1)
     elif edge == "S":
-        s = jnp.swapaxes(arr[:, h:2 * h, lo:hi], 1, 2)
+        s = jnp.swapaxes(arr[..., h:2 * h, lo:hi], -2, -1)
     else:  # N
-        s = jnp.swapaxes(jnp.flip(arr[:, nl:nl + h, lo:hi], axis=1), 1, 2)
+        s = jnp.swapaxes(jnp.flip(arr[..., nl:nl + h, lo:hi], axis=-2),
+                         -2, -1)
     return s
 
 
 def _place(arr: Array, strip: Array, edge: str, h: int, nl: int,
            full_width: bool) -> Array:
-    """Receiver-side placement of a (k, t, d) strip into halo slot ``edge``."""
+    """Receiver-side placement of a (..., t, d) strip into halo slot
+    ``edge`` (leading-dim agnostic, like :func:`_extract`)."""
     lo, hi = (0, nl + 2 * h) if full_width else (h, h + nl)
     if edge == "W":
-        blk = jnp.flip(strip, axis=2)
-        return arr.at[:, lo:hi, 0:h].set(blk.astype(arr.dtype))
+        blk = jnp.flip(strip, axis=-1)
+        return arr.at[..., lo:hi, 0:h].set(blk.astype(arr.dtype))
     if edge == "E":
-        return arr.at[:, lo:hi, nl + h:nl + 2 * h].set(strip.astype(arr.dtype))
+        return arr.at[..., lo:hi, nl + h:nl + 2 * h].set(strip.astype(arr.dtype))
     if edge == "S":
-        blk = jnp.flip(jnp.swapaxes(strip, 1, 2), axis=1)
-        return arr.at[:, 0:h, lo:hi].set(blk.astype(arr.dtype))
-    blk = jnp.swapaxes(strip, 1, 2)
-    return arr.at[:, nl + h:nl + 2 * h, lo:hi].set(blk.astype(arr.dtype))
+        blk = jnp.flip(jnp.swapaxes(strip, -2, -1), axis=-2)
+        return arr.at[..., 0:h, lo:hi].set(blk.astype(arr.dtype))
+    blk = jnp.swapaxes(strip, -2, -1)
+    return arr.at[..., nl + h:nl + 2 * h, lo:hi].set(blk.astype(arr.dtype))
 
 
 def make_halo_exchanger(dec: Decomposition, axis_names=("tile", "y", "x")):
     """Build the halo update function to call *inside* shard_map.
 
-    Returns ``exchange(fields: dict[str, (nk, nl+2h, nl+2h)], vector_pairs)``.
-    All rounds, strips, masks and transforms are static; only ppermute moves
-    data, so XLA can overlap these collectives with interior compute.
+    Returns ``exchange(fields: dict[str, (..., nl+2h, nl+2h)], vector_pairs)``
+    — typically ``(nk, nl+2h, nl+2h)``, but every strip/flip/placement is
+    addressed from the trailing spatial axes, so arbitrary leading dims
+    (an ensemble member axis stacked on k) batch through the same ppermute
+    rounds.  All rounds, strips, masks and transforms are static; only
+    ppermute moves data, so XLA can overlap these collectives with interior
+    compute.
     """
     rounds = build_rounds(dec)
     h, nl = dec.halo, dec.n_local
@@ -200,7 +221,7 @@ def make_halo_exchanger(dec: Decomposition, axis_names=("tile", "y", "x")):
                 for n in scalars:
                     strip = _extract(snap[n], rnd.send_edge, h, nl, full)
                     if rnd.reversed:
-                        strip = jnp.flip(strip, axis=1)
+                        strip = jnp.flip(strip, axis=-2)
                     moved = jax.lax.ppermute(strip, axis_name=axis_names,
                                              perm=perm)
                     placements.append((n, rnd, recv, moved))
@@ -208,8 +229,8 @@ def make_halo_exchanger(dec: Decomposition, axis_names=("tile", "y", "x")):
                     su = _extract(snap[un], rnd.send_edge, h, nl, full)
                     sv = _extract(snap[vn], rnd.send_edge, h, nl, full)
                     if rnd.reversed:
-                        su = jnp.flip(su, axis=1)
-                        sv = jnp.flip(sv, axis=1)
+                        su = jnp.flip(su, axis=-2)
+                        sv = jnp.flip(sv, axis=-2)
                     ru = M[0, 0] * su + M[0, 1] * sv
                     rv = M[1, 0] * su + M[1, 1] * sv
                     mu = jax.lax.ppermute(ru, axis_name=axis_names, perm=perm)

@@ -62,6 +62,34 @@ def init_state(cfg: FV3Config, seed: int = 0) -> dict:
     return {k: jnp.asarray(v) for k, v in state.items()}
 
 
+def ensemble_state(cfg: FV3Config, n_members: int, *,
+                   amplitude: float = 1e-3, seed: int = 0) -> dict:
+    """M perturbed ensemble members stacked on a leading axis:
+    ``(M, 6, nk, npx+2h, npx+2h)`` per field (the layout
+    :func:`~repro.fv3.dyncore.make_step_ensemble` steps).
+
+    Member 0 is the unperturbed :func:`init_state`; members 1.. add small
+    random interior perturbations to ``pt`` and ``delp`` (the standard
+    initial-condition-perturbation ensemble spin-up).  Halos stay zero —
+    the first step's exchange fills them, exactly as in the single-member
+    path, which keeps the batched-vs-sequential bit-identity meaningful.
+    """
+    base = init_state(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    N, h = cfg.npx, cfg.halo
+    out = {}
+    for k, v in base.items():
+        arr = np.repeat(np.asarray(v)[None], n_members, axis=0)
+        if k in ("pt", "delp") and n_members > 1:
+            noise = rng.standard_normal(
+                (n_members - 1,) + arr.shape[1:]).astype(arr.dtype)
+            mask = np.zeros(arr.shape[1:], arr.dtype)
+            mask[:, :, h:h + N, h:h + N] = 1.0
+            arr[1:] += amplitude * noise * mask
+        out[k] = jnp.asarray(arr)
+    return out
+
+
 def blocks_from_global(state: dict, cfg: FV3Config) -> dict:
     """Reshape sequential (6, nk, N+2h, N+2h) state into distributed
     (6, py, px, nk, nl+2h, nl+2h) rank blocks (overlapping halo copies)."""

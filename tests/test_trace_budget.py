@@ -7,13 +7,24 @@ program's trace+compile time ever exceeds a *generous* threshold again —
 an O(nk²) regression cannot return silently.  The threshold is deliberately
 loose (slow CI runners must not flake) while still far below what the
 unrolled path costs at this depth.
+
+The wall-clock budget is tunable via ``$REPRO_TRACE_BUDGET_S`` so one
+tier-1 invocation (``pytest -x -q``, the ROADMAP command) runs everywhere:
+CI sets a laxer value for shared runners, and ``REPRO_TRACE_BUDGET_S=0``
+(or negative) self-skips the wall-clock check entirely on machines too
+overloaded for any timing assertion — the *static* IR-size gate below
+still runs there, so an O(nk²) blowup is caught deterministically either
+way.  The deterministic IR metrics also feed the CI perf-regression gate
+(``benchmarks/check_regression.py``).
 """
 
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import compile_program
 from repro.core.backend import clear_compile_cache
@@ -22,7 +33,20 @@ from repro.fv3.dyncore import FV3Config, build_remap_program, default_params
 TRACE_BUDGET_S = 30.0  # generous: the search path traces in ~1 s here
 
 
+def _budget_s() -> float:
+    """Wall-clock budget, overridable per machine; <= 0 disables."""
+    try:
+        return float(os.environ.get("REPRO_TRACE_BUDGET_S", TRACE_BUDGET_S))
+    except ValueError:
+        return TRACE_BUDGET_S
+
+
 def test_nk32_remap_trace_time_within_budget():
+    budget = _budget_s()
+    if budget <= 0:
+        pytest.skip("wall-clock trace budget disabled via "
+                    "REPRO_TRACE_BUDGET_S (overloaded runner); the static "
+                    "IR gate still applies")
     cfg = FV3Config(npx=6, nk=32, halo=6, n_tracers=0)
     dom = cfg.seq_dom()
     prog = build_remap_program(cfg, dom, fields=("pt",))
@@ -36,9 +60,9 @@ def test_nk32_remap_trace_time_within_budget():
     fn = compile_program(prog, "jnp")
     jax.block_until_ready(fn(dict(ins), default_params(cfg)))
     trace_s = time.perf_counter() - t0
-    assert trace_s < TRACE_BUDGET_S, (
+    assert trace_s < budget, (
         f"nk=32 remap traced+compiled in {trace_s:.1f}s (> "
-        f"{TRACE_BUDGET_S}s budget) — an O(nk²) IR blowup is back; check "
+        f"{budget}s budget) — an O(nk²) IR blowup is back; check "
         "that build_remap_program still lowers the level search to loops")
 
 
