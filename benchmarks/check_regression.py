@@ -68,6 +68,16 @@ def extract_metrics(bench: dict) -> dict[str, int]:
         out[f"ensemble.m{m}.csw_kernels_pallas_grid"] = \
             e["csw_kernels_pallas_grid"]
         out[f"ensemble.m{m}.step_kernels"] = e["step_kernels"]
+        # hybrid-chunking invariants (PR 6): restructuring the launch into
+        # member chunks must never change the kernel set, and the chunk-scan
+        # arithmetic (ceil(M/C)) is exact — both gate at delta 0
+        if "csw_kernels_pallas_chunked" in e:
+            out[f"ensemble.m{m}.chunked_kernel_delta"] = abs(
+                e["csw_kernels_pallas_chunked"] - e["csw_kernels_pallas_grid"])
+        if e.get("chunk_scan_n_chunks_expected") is not None:
+            out[f"ensemble.m{m}.chunk_scan_count_delta"] = abs(
+                (e.get("chunk_scan_n_chunks") or 0)
+                - e["chunk_scan_n_chunks_expected"])
     out["trace_budget.nk80_remap_ir_nodes"] = trace_budget_ir_nodes()
     return out
 

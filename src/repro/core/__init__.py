@@ -15,6 +15,7 @@ from .hardware import (  # noqa: F401
 from .graph import FieldDecl, Node, State, StencilProgram, rename_stencil  # noqa: F401
 from .backend import (  # noqa: F401
     Backend,
+    BatchSpec,
     TuningCache,
     available_backends,
     compile_program,
@@ -22,6 +23,7 @@ from .backend import (  # noqa: F401
     default_cache,
     donation_supported,
     get_backend,
+    parse_batch,
     register_backend,
     set_default_cache,
 )
@@ -63,7 +65,14 @@ from .transforms import (  # noqa: F401
     strength_reduce_program,
     subgraph_fuse,
 )
-from .autotune import TuneResult, model_cost, tune_stencil, wallclock  # noqa: F401
+from .autotune import (  # noqa: F401
+    TuneResult,
+    model_cost,
+    tune_member_chunk,
+    tune_program_chunk,
+    tune_stencil,
+    wallclock,
+)
 from .stencil import (  # noqa: F401
     at_found,
     index_search,

@@ -19,6 +19,13 @@ from .base import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from .batching import (  # noqa: F401
+    AUTO,
+    BatchSpec,
+    pad_members,
+    parse_batch,
+    scan_chunked,
+)
 from .cache import (  # noqa: F401
     CacheStats,
     TuningCache,

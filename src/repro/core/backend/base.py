@@ -48,6 +48,10 @@ class Backend(abc.ABC):
     name: str = ""
     #: name of the hardware descriptor assumed when the caller passes none
     default_hardware: str = "tpu-v5e"
+    #: True when the backend can place the ensemble member axis (and the
+    #: hybrid chunk loop, ``batch="vmap:C,grid"``) on its own launch
+    #: structure; False → ``"grid"`` modes degrade to vmap/scan
+    member_grid: bool = False
 
     def resolve_hw(self, hardware: Hardware | str | None) -> Hardware:
         return resolve_hardware(hardware, default=self.default_hardware)
@@ -63,12 +67,18 @@ class Backend(abc.ABC):
 
         ``n_members=M`` compiles an ensemble-batched runner: every field
         carries a leading member axis of extent M.  ``batch`` selects the
-        lowering of that axis — ``"vmap"`` wraps the single-member runner
-        in :func:`jax.vmap` (the jnp backend's only strategy: XLA owns the
-        mapping); ``"grid"`` asks the backend to place members on its own
-        launch structure (the Pallas backends prepend an outermost
-        sequential grid axis).  Backends without a grid notion treat
-        ``"grid"`` as ``"vmap"``.
+        lowering of that axis — a spec string parsed by
+        :func:`~repro.core.backend.batching.parse_batch` (or an already-
+        parsed :class:`~repro.core.backend.batching.BatchSpec`):
+        ``"vmap"`` wraps the single-member runner in :func:`jax.vmap`
+        (the jnp backend's only inner strategy: XLA owns the mapping);
+        ``"grid"`` asks the backend to place members on its own launch
+        structure (the Pallas backends prepend an outermost sequential
+        grid axis); chunked hybrids ``"vmap:C"`` / ``"vmap:C,grid"`` /
+        ``"grid:C"`` tile the axis into ceil(M/C)-long chunk loops (scan
+        or outermost grid) over C-wide inner batches.  Backends without a
+        grid notion (``member_grid=False``) treat every "grid" mode as its
+        vmap/scan equivalent.
         """
 
     # -- schedule policy (hardware-parameterized, overridable) ---------------

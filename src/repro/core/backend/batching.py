@@ -1,0 +1,206 @@
+"""Hybrid ensemble member batching — the ``batch=`` spec of the pipeline.
+
+PR 5 gave every program an ensemble axis with two all-or-nothing lowerings:
+``"vmap"`` (one fused batch, working set scales with M — collapses once the
+batched step stops fitting fast memory) and ``"grid"`` (one member per grid
+step, maximum launch-pipeline overhead).  The benchmarks show both extremes
+lose at large M; the fix is the same one Devito/DaCe apply to any other loop
+dimension: *tile it*.  A :class:`BatchSpec` describes the tiling —
+
+    inner  how the members inside one chunk batch together
+           ("vmap" → :func:`jax.vmap`; "grid" → the backend's member grid
+           axis, Pallas only)
+    chunk  C, members per chunk (0 → unchunked, C = M; AUTO → cost-model
+           pick via :func:`repro.core.autotune.tune_member_chunk`)
+    outer  how chunks are sequenced ("scan" → a program-level
+           :func:`jax.lax.scan` over ceil(M/C) chunks; "grid" → the chunk
+           loop becomes the outermost *sequential* Pallas grid axis with
+           C-member blocks — backends without a grid fall back to "scan")
+
+Accepted spellings (:func:`parse_batch`):
+
+    "vmap"           one vmap over all M                (PR 5 behavior)
+    "grid"           member grid axis, one member/step  (PR 5 behavior)
+    "vmap:C"         scan over ceil(M/C) chunks of a C-wide vmap
+    "vmap:C,scan"    same, explicit
+    "vmap:C,grid"    chunk loop on the outermost Pallas grid axis,
+                     C-member blocks inside each kernel
+    "grid:C"         scan over chunks of a C-member grid axis (A/B probe)
+    "vmap:auto[,..]" C picked by the cost model per motif
+
+M not divisible by C is handled by *replicating the last member* up to the
+next multiple (never zeros — padded members flow through divisions) and
+slicing the pad off after; real members are bit-identical either way since
+members never interact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+#: sentinel chunk value — resolve through the cost model at compile time
+AUTO = -1
+
+_INNER = ("vmap", "grid")
+_OUTER = ("scan", "grid")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    """Parsed member-batching strategy (see module docstring)."""
+
+    inner: str = "vmap"
+    chunk: int = 0
+    outer: str = "scan"
+
+    def __post_init__(self):
+        if self.inner not in _INNER:
+            raise ValueError(
+                f"batch inner mode must be one of {_INNER}, got {self.inner!r}")
+        if self.outer not in _OUTER:
+            raise ValueError(
+                f"batch outer mode must be one of {_OUTER}, got {self.outer!r}")
+        if self.chunk != AUTO and self.chunk < 0:
+            raise ValueError(
+                f"batch chunk size must be positive, got {self.chunk}")
+        if self.inner == "grid" and self.chunk and self.outer == "grid":
+            raise ValueError(
+                "batch spec 'grid:C,grid' is redundant — the member grid "
+                "axis already walks members sequentially; use 'grid' or "
+                "'vmap:C,grid'")
+
+    # -- derived quantities --------------------------------------------------
+    @property
+    def token(self) -> str:
+        """Canonical spelling — the memo/tuning-cache key component."""
+        if not self.chunk:
+            return self.inner
+        c = "auto" if self.chunk == AUTO else str(self.chunk)
+        if self.outer == "grid":
+            return f"{self.inner}:{c},grid"
+        return f"{self.inner}:{c}"
+
+    def chunk_for(self, n_members: int) -> int:
+        """Effective C for an M-member ensemble (clamped; 0 → M)."""
+        if not self.chunk:
+            return n_members
+        if self.chunk == AUTO:
+            raise ValueError("batch chunk 'auto' must be resolved before use")
+        return min(self.chunk, n_members)
+
+    def n_chunks(self, n_members: int) -> int:
+        return -(-n_members // self.chunk_for(n_members))
+
+    def padded_members(self, n_members: int) -> int:
+        """M rounded up to a whole number of chunks."""
+        return self.n_chunks(n_members) * self.chunk_for(n_members)
+
+
+def parse_batch(batch: "str | BatchSpec") -> BatchSpec:
+    """Parse/validate a ``batch=`` argument into a :class:`BatchSpec`.
+
+    Raises ``ValueError`` (always mentioning ``batch``) on malformed specs:
+    unknown modes, non-integer or non-positive chunk sizes, stray commas,
+    and the redundant ``grid:C,grid`` combination.
+    """
+    if isinstance(batch, BatchSpec):
+        return batch
+    if not isinstance(batch, str):
+        raise ValueError(
+            f"batch must be a spec string or BatchSpec, got {batch!r}")
+    parts = batch.split(",")
+    if len(parts) > 2 or any(not p for p in parts):
+        raise ValueError(
+            f"malformed batch spec {batch!r}: expected "
+            "'vmap'|'grid'|'<inner>:<C>[,scan|grid]'")
+    head = parts[0].split(":")
+    if len(head) > 2 or any(not p for p in head):
+        raise ValueError(
+            f"malformed batch spec {batch!r}: chunk goes after a single "
+            "':' as in 'vmap:4' or 'vmap:auto'")
+    inner = head[0]
+    if inner not in _INNER:
+        raise ValueError(
+            f"batch inner mode must be 'vmap' or 'grid', got {inner!r} "
+            f"(in {batch!r})")
+    chunk = 0
+    if len(head) == 2:
+        if head[1] == "auto":
+            chunk = AUTO
+        else:
+            try:
+                chunk = int(head[1])
+            except ValueError:
+                raise ValueError(
+                    f"batch chunk size must be an integer or 'auto', got "
+                    f"{head[1]!r} (in {batch!r})") from None
+            if chunk <= 0:
+                raise ValueError(
+                    f"batch chunk size must be positive, got {chunk} "
+                    f"(in {batch!r})")
+    outer = "scan"
+    if len(parts) == 2:
+        if not chunk:
+            raise ValueError(
+                f"batch outer mode {parts[1]!r} requires a chunk size "
+                f"('vmap:C,{parts[1]}'), got {batch!r}")
+        outer = parts[1]
+        if outer not in _OUTER:
+            raise ValueError(
+                f"batch outer mode must be 'scan' or 'grid', got {outer!r} "
+                f"(in {batch!r})")
+    return BatchSpec(inner=inner, chunk=chunk, outer=outer)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-M padding and the shared chunk-scan lowering
+# ---------------------------------------------------------------------------
+
+
+def pad_members(x: Any, n_members: int, padded: int) -> Any:
+    """Pad the leading member axis from M to ``padded`` by replicating the
+    last member (zeros would send NaN through divisions in padded columns;
+    replicated real data streams through every kernel unchanged)."""
+    if padded == n_members:
+        return x
+    rep = jnp.broadcast_to(x[n_members - 1:n_members],
+                           (padded - n_members,) + x.shape[1:])
+    return jnp.concatenate([x, rep], axis=0)
+
+
+def pad_wrapped(runner, n_members: int, padded: int):
+    """Wrap an Mp-member runner for ragged-M callers: replicate-pad the
+    member axis on the way in, slice the pad off on the way out."""
+    def run(fields: Mapping[str, Any], params=None) -> dict:
+        padded_fields = {k: pad_members(jnp.asarray(v), n_members, padded)
+                         for k, v in fields.items()}
+        out = runner(padded_fields, params)
+        return {k: v[:n_members] for k, v in out.items()}
+    return run
+
+
+def scan_chunked(runner, n_members: int, chunk: int):
+    """Lower M members as ``lax.scan`` over ceil(M/C) chunks of a C-member
+    ``runner`` — the outer="scan" hybrid strategy.  The scan's xs slicing
+    materializes one chunk's state at a time (memory streaming), and ragged
+    M is replicate-padded/sliced per :func:`pad_members`."""
+    n_chunks = -(-n_members // chunk)
+    padded = n_chunks * chunk
+
+    def run(fields: Mapping[str, Any], params=None) -> dict:
+        chunks = {k: pad_members(jnp.asarray(v), n_members, padded)
+                  .reshape((n_chunks, chunk) + jnp.shape(v)[1:])
+                  for k, v in fields.items()}
+
+        def body(_, ch):
+            return None, runner(ch, params)
+
+        _, out = jax.lax.scan(body, None, chunks)
+        return {k: v.reshape((padded,) + v.shape[2:])[:n_members]
+                for k, v in out.items()}
+
+    return run

@@ -41,8 +41,10 @@ _CACHE_VERSION = 1
 #: enforced in model_cost, and level-search marching FLOPs in node_flops.
 #: v6: ensemble axis — model_cost takes n_members and amortizes the
 #: per-launch overhead across the member grid dimension; tuning keys carry
-#: n_members.)
-COST_MODEL_VERSION = 6
+#: n_members.  v7: hybrid member chunking — model_cost/vmem_footprint take
+#: member_chunk, launch terms count ceil(M/C) chunk steps instead of M,
+#: feasibility prices C-member blocks, and tuning keys carry the chunk.)
+COST_MODEL_VERSION = 7
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from ..hardware import Hardware
 from ..stencil.schedule import Schedule
 from .base import Backend, get_backend
+from .batching import AUTO, BatchSpec, pad_members, parse_batch
 from .cache import CacheStats, stencil_fingerprint
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a circular import
@@ -79,31 +80,40 @@ def compile_stencil(stencil, dom, *, backend: "str | Backend" = "jnp",
                     interpret: bool = True, dtype=None,
                     memoize: bool = True,
                     n_members: int | None = None,
-                    batch: str = "vmap") -> Callable:
+                    batch: "str | BatchSpec" = "vmap") -> Callable:
     """Compile one stencil through a registered backend (memoized).
 
     ``n_members``/``batch`` select the ensemble lowering (see
-    :meth:`Backend.compile_stencil`); both are part of the memo key — a
-    member-batched runner accepts different shapes than a single-member one.
+    :meth:`Backend.compile_stencil` for the accepted spec forms); both are
+    part of the memo key — a member-batched runner accepts different shapes
+    than a single-member one, and a chunked runner a different launch
+    structure than an unchunked one.  ``batch="vmap:auto"`` resolves the
+    chunk size through the cost model before compiling.
     """
     be = get_backend(backend)
     hw = be.resolve_hw(hardware)
+    spec = parse_batch(batch)
+    if n_members and spec.chunk == AUTO:
+        from ..autotune import tune_member_chunk
+
+        spec = dataclasses.replace(spec, chunk=tune_member_chunk(
+            stencil, dom, hw=hw, backend=be.name, n_members=n_members))
     if not memoize:
         return be.compile_stencil(stencil, dom, schedule=schedule,
                                   hardware=hw, interpret=interpret,
                                   dtype=dtype, n_members=n_members,
-                                  batch=batch)
+                                  batch=spec)
     key = (stencil_fingerprint(stencil), dom,
            None if schedule is None else dataclasses.astuple(schedule),
            be.name, hw.name, interpret, None if dtype is None else str(dtype),
-           n_members, batch if n_members else None)
+           n_members, spec.token if n_members else None)
     runner = _runner_memo.get(key)
     if runner is None:
         _runner_stats.misses += 1
         runner = be.compile_stencil(stencil, dom, schedule=schedule,
                                     hardware=hw, interpret=interpret,
                                     dtype=dtype, n_members=n_members,
-                                    batch=batch)
+                                    batch=spec)
         _runner_memo[key] = runner
     else:
         _runner_stats.hits += 1
@@ -156,7 +166,7 @@ def compile_program(program: "StencilProgram",
                     donate: bool = False,
                     opt_level: int = 0,
                     n_members: int | None = None,
-                    batch: str = "vmap") -> Callable:
+                    batch: "str | BatchSpec" = "vmap") -> Callable:
     """Compile a whole :class:`StencilProgram` into one functional callable
     ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
@@ -178,31 +188,75 @@ def compile_program(program: "StencilProgram",
     ``n_members=M`` threads an ensemble/member axis through the whole
     pipeline: every program field gains a leading axis of extent M, the
     optimizer's cost model amortizes launch overhead across members, and
-    each backend lowers the axis per ``batch`` — ``"vmap"`` wraps runners
-    in :func:`jax.vmap` (the jnp strategy; XLA owns the mapping), ``"grid"``
-    places members on the backend's launch structure (Pallas: outermost
-    sequential grid axis, same kernel count as M=1).  The batch dimension
-    is a compilation-layer decision, not a per-stencil rewrite.
+    each backend lowers the axis per ``batch``.  Accepted ``batch`` forms
+    (see :mod:`repro.core.backend.batching`):
+
+      * ``"vmap"`` — one :func:`jax.vmap` over all M (the jnp strategy;
+        XLA owns the mapping; working set scales with M);
+      * ``"grid"`` — members on the backend's launch structure (Pallas:
+        outermost sequential grid axis, same kernel count as M=1);
+      * ``"vmap:C"`` (= ``"vmap:C,scan"``) — the hybrid: a program-level
+        :func:`jax.lax.scan` over ceil(M/C) chunks, each a C-wide vmap —
+        one chunk's working set is live at a time (memory streaming);
+      * ``"vmap:C,grid"`` — the chunk loop becomes the outermost
+        sequential Pallas grid axis with C-member blocks inside each
+        kernel (falls back to the scan form on gridless backends);
+      * ``"grid:C"`` — scan over chunks of a C-member grid axis;
+      * ``"vmap:auto"`` / ``"vmap:auto,grid"`` — C picked per program by
+        the cost model (:func:`~repro.core.autotune.tune_program_chunk`).
+
+    M not divisible by C replicate-pads the last member to a whole chunk
+    and slices the pad off after — bit-identical for the real members.
+    Malformed specs (unknown modes, bad chunk sizes) raise ``ValueError``.
+    The batch dimension is a compilation-layer decision, not a
+    per-stencil rewrite.
 
     The returned callable exposes introspection attributes:
-    ``n_kernels`` (number of compiled runners), ``opt_report`` (the
-    :class:`~repro.core.passes.PipelineReport`, ``None`` at level 0),
-    ``program`` (the graph actually lowered), ``input_fields`` and
-    ``transient_inputs`` (fields auto-allocated when the caller omits
-    them — empty of transients once fusion has localized them), plus
-    ``n_members`` / ``batch`` describing the ensemble lowering.
+    ``n_kernels`` (number of compiled runners — invariant under chunking),
+    ``opt_report`` (the :class:`~repro.core.passes.PipelineReport`,
+    ``None`` at level 0), ``program`` (the graph actually lowered),
+    ``input_fields`` and ``transient_inputs`` (fields auto-allocated when
+    the caller omits them — empty of transients once fusion has localized
+    them), plus ``n_members`` / ``batch`` / ``batch_spec`` /
+    ``member_chunk`` / ``n_chunks`` describing the ensemble lowering.
     """
-    if batch not in ("vmap", "grid"):
-        raise ValueError(f"batch must be 'vmap' or 'grid', got {batch!r}")
     be = get_backend(backend)
     hw = be.resolve_hw(hardware)
+    spec = parse_batch(batch)
+    if n_members and spec.chunk == AUTO:
+        from ..autotune import tune_program_chunk
+
+        spec = dataclasses.replace(spec, chunk=tune_program_chunk(
+            program, backend=be.name, hw=hw, n_members=n_members))
+    # effective spec for this M: clamp C, degrade grid-outer chunk loops on
+    # gridless backends to the scan form, collapse single-chunk scans
+    eff = spec
+    if n_members and eff.chunk:
+        C = eff.chunk_for(n_members)
+        outer = eff.outer if be.member_grid else "scan"
+        if outer == "scan" and C >= n_members:
+            eff = BatchSpec(inner=eff.inner)
+        else:
+            eff = BatchSpec(inner=eff.inner, chunk=C, outer=outer)
+    chunk_scan = bool(n_members and eff.chunk and eff.outer == "scan")
+    chunk_grid = bool(n_members and eff.chunk and eff.outer == "grid")
+    Mp = eff.padded_members(n_members) if (chunk_scan or chunk_grid) else \
+        (n_members or 0)
     opt_report = None
     if opt_level:
         from ..passes import optimize_program
 
         program, opt_report = optimize_program(
             program, opt_level=opt_level, backend=be.name, hardware=hw,
-            n_members=n_members or 1)
+            n_members=n_members or 1,
+            member_chunk=eff.chunk if n_members else 0)
+    # under outer="scan" each kernel sees one C-member chunk; under
+    # outer="grid" the kernels own the chunk loop over the padded axis
+    stencil_members, stencil_batch = n_members, eff
+    if chunk_scan:
+        stencil_members, stencil_batch = eff.chunk, BatchSpec(inner=eff.inner)
+    elif chunk_grid:
+        stencil_members = Mp
     runners = []
     for s in program.states:
         for n in s.nodes:
@@ -210,17 +264,16 @@ def compile_program(program: "StencilProgram",
             sched = _resolve_override(n, schedule_overrides)
             r = compile_stencil(n.stencil, dom, backend=be, schedule=sched,
                                 hardware=hw, interpret=interpret,
-                                n_members=n_members, batch=batch)
+                                n_members=stencil_members,
+                                batch=stencil_batch)
             runners.append((n, r))
 
     fields_decl = program.fields
     dom = program.dom
     inputs, drop_after = _liveness(program, runners)
 
-    def run(fields: dict, params: dict | None = None) -> dict:
-        params = dict(params or {})
-        env = dict(fields)
-        template = next((v for v in fields.values()
+    def _exec(env: dict, params: dict, lead: tuple) -> dict:
+        template = next((v for v in env.values()
                          if hasattr(v, "dtype")), None)
         for name in inputs:
             if name not in env:
@@ -229,7 +282,6 @@ def compile_program(program: "StencilProgram",
                 # zero from an input keeps shard_map's manual-axes (VMA)
                 # tracking consistent inside scan carries.
                 decl = fields_decl[name]
-                lead = (n_members,) if n_members else ()
                 z = jnp.zeros(lead + dom.padded_shape(decl.interface),
                               decl.dtype)
                 if template is not None:
@@ -242,6 +294,35 @@ def compile_program(program: "StencilProgram",
             for f in drop_after[i]:
                 env.pop(f, None)
         return env
+
+    if chunk_scan:
+        C, nC = eff.chunk, Mp // eff.chunk
+
+        def run(fields: dict, params: dict | None = None) -> dict:
+            params = dict(params or {})
+            chunks = {k: pad_members(jnp.asarray(v), n_members, Mp)
+                      .reshape((nC, C) + jnp.shape(v)[1:])
+                      for k, v in fields.items()}
+
+            def body(_, ch):
+                # transients allocated inside the body are C-member wide:
+                # only one chunk's working set is ever live
+                return None, _exec(dict(ch), params, (C,))
+
+            _, out = jax.lax.scan(body, None, chunks)
+            return {k: v.reshape((Mp,) + v.shape[2:])[:n_members]
+                    for k, v in out.items()}
+    elif chunk_grid and Mp != n_members:
+        def run(fields: dict, params: dict | None = None) -> dict:
+            env = {k: pad_members(jnp.asarray(v), n_members, Mp)
+                   for k, v in fields.items()}
+            out = _exec(env, dict(params or {}), (Mp,))
+            return {k: v[:n_members] for k, v in out.items()}
+    else:
+        lead0 = (Mp,) if n_members else ()
+
+        def run(fields: dict, params: dict | None = None) -> dict:
+            return _exec(dict(fields), dict(params or {}), lead0)
 
     fn: Callable = run
     donated = False
@@ -258,7 +339,10 @@ def compile_program(program: "StencilProgram",
 
     fn.n_kernels = len(runners)
     fn.n_members = n_members
-    fn.batch = batch if n_members else None
+    fn.batch = spec.token if n_members else None
+    fn.batch_spec = eff if n_members else None
+    fn.member_chunk = eff.chunk if (n_members and eff.chunk) else None
+    fn.n_chunks = (Mp // eff.chunk) if (chunk_scan or chunk_grid) else None
     fn.opt_report = opt_report
     fn.program = program
     fn.input_fields = tuple(inputs)

@@ -22,6 +22,15 @@ Schedules map onto Pallas as follows (paper §V-A ↔ TPU):
    would see at M=1.  Schedules, legality and per-invocation VMEM footprint
    are unchanged per member; one ``pl.pallas_call`` serves all M members
    (launch overhead amortized — the cost model prices this).
+ * chunked members (``member_chunk=C``, the ``batch="vmap:C,grid"``
+   hybrid): the outermost grid axis walks ceil(M/C) *chunks* instead of
+   single members, each block carries a non-squeezed leading member
+   dimension of extent C, and kernel bodies batch the chunk through every
+   statement (trailing-axis windows; explicit leading slices at traced-K
+   levels).  The K-blocked marching carry gains a leading C dim in scratch
+   and still resets at each chunk's first block — per-chunk carry reset,
+   no leaks between chunks.  Per-invocation VMEM scales by C, which is
+   exactly what ``vmem_footprint(member_chunk=C)`` prices for the tuner.
 
 Kernels are validated in ``interpret=True`` mode on CPU against the jnp
 oracle; on real TPUs the same ``pl.pallas_call`` lowers to Mosaic.
@@ -106,17 +115,42 @@ def _march_search(e: LevelSearch, read, params, read_col, nk: int):
             cols[key] = read_col(fl.name, fl.di, fl.dj)
 
     def row(col, s):
-        return jax.lax.dynamic_index_in_dim(col, s, 0, keepdims=False)
+        # K sits at axis -3 so leading member-chunk dims ride through
+        return jax.lax.dynamic_index_in_dim(col, s, col.ndim - 3,
+                                            keepdims=False)
 
-    shape = jnp.broadcast_shapes(jnp.shape(target), tuple(cwin.shape[1:]))
+    if cwin.ndim == 3:
+        shape = jnp.broadcast_shapes(jnp.shape(target), tuple(cwin.shape[1:]))
+
+        def lift(r):
+            return r
+    elif jnp.ndim(target) >= cwin.ndim:
+        # chunked columns (C, K, J, I) against a (C, rows, J, I) target:
+        # level rows keep a unit K axis so the chunk axis stays aligned
+        shape = jnp.broadcast_shapes(
+            jnp.shape(target),
+            tuple(cwin.shape[:-3]) + (1,) + tuple(cwin.shape[-2:]))
+
+        def lift(r):
+            return r[..., None, :, :]
+    else:
+        # chunked per-level context (search evaluated inside a marching
+        # body): target is (C, J, I) — level rows align as-is
+        shape = jnp.broadcast_shapes(
+            jnp.shape(target),
+            tuple(cwin.shape[:-3]) + tuple(cwin.shape[-2:]))
+
+        def lift(r):
+            return r
 
     def vals_at(s):
         return {(fl.name, fl.di, fl.dj, fl.dk): jnp.broadcast_to(
-                    row(cols[(fl.name, fl.di, fl.dj)], s + fl.dk), shape)
+                    lift(row(cols[(fl.name, fl.di, fl.dj)], s + fl.dk)),
+                    shape)
                 for fl in finds}
 
     def body(s, acc):
-        take = row(cwin, s) <= target
+        take = lift(row(cwin, s)) <= target
         fresh = vals_at(s)
         return {k: jnp.where(take, fresh[k], acc[k]) for k in acc}
 
@@ -176,17 +210,21 @@ def _member_index_map(imap, m, *grid):
     return (m,) + tuple(imap(*grid))
 
 
-def _member_specs(specs):
-    """Prepend a squeezed (``None``) member block dimension to every array
-    BlockSpec; scalar-param specs (``memory_space=ANY``, no block shape) are
-    broadcast across members and pass through untouched."""
+def _member_specs(specs, chunk: int = 0):
+    """Prepend a member block dimension to every array BlockSpec: squeezed
+    (``None``, one member per grid step) by default, or a non-squeezed
+    extent-``chunk`` dim whose grid axis indexes *chunk blocks* — the
+    hybrid ``vmap:C,grid`` lowering.  Scalar-param specs
+    (``memory_space=ANY``, no block shape) are broadcast across members
+    and pass through untouched."""
     out = []
     for spec in specs:
         if spec.block_shape is None:
             out.append(spec)
             continue
+        lead = (chunk,) if chunk else (None,)
         out.append(pl.BlockSpec(
-            (None,) + tuple(spec.block_shape),
+            lead + tuple(spec.block_shape),
             functools.partial(_member_index_map, spec.index_map)))
     return out
 
@@ -200,35 +238,40 @@ def _hwindow(dom: DomainSpec, dj: int, di: int):
 
 
 def _k_align(win, dk: int, out_nk: int):
-    """Align a (K_f, J, I) window onto an ``out_nk``-row iteration space
-    shifted by ``dk``: row ``k`` of the result holds ``win[k + dk]``,
-    edge-clamped — the one K-offset read idiom shared by the horizontal
-    kernel and the PARALLEL passes of vertical kernels.  ``K_f`` may differ
-    from ``out_nk`` (K-interface fields carry nk+1 rows, centers nk);
-    interval restrictions make the clamp-padded rows dead."""
-    field_nk = win.shape[0]
+    """Align a ``(lead..., K_f, J, I)`` window onto an ``out_nk``-row
+    iteration space shifted by ``dk``: row ``k`` of the result holds
+    ``win[..., k + dk, :, :]``, edge-clamped — the one K-offset read idiom
+    shared by the horizontal kernel and the PARALLEL passes of vertical
+    kernels.  K sits at axis ``-3`` so leading member-chunk dims ride
+    through.  ``K_f`` may differ from ``out_nk`` (K-interface fields carry
+    nk+1 rows, centers nk); interval restrictions make the clamp-padded
+    rows dead."""
+    field_nk = win.shape[-3]
     if dk == 0 and field_nk == out_nk:
         return win
     lo = max(0, dk)
     hi = min(field_nk, out_nk + dk)
-    sl = win[lo:hi]
+    sl = win[..., lo:hi, :, :]
+    lead = sl.shape[:-3]
     parts = []
     front = lo - dk  # rows whose k + dk < 0
     if front > 0:
-        parts.append(jnp.broadcast_to(sl[:1], (front,) + sl.shape[1:]))
+        parts.append(jnp.broadcast_to(sl[..., :1, :, :],
+                                      lead + (front,) + sl.shape[-2:]))
     parts.append(sl)
     back = out_nk - front - (hi - lo)  # rows whose k + dk >= field_nk
     if back > 0:
-        parts.append(jnp.broadcast_to(sl[-1:], (back,) + sl.shape[1:]))
+        parts.append(jnp.broadcast_to(sl[..., -1:, :, :],
+                                      lead + (back,) + sl.shape[-2:]))
     if len(parts) == 1:
         return sl
-    return jnp.concatenate(parts, axis=0)
+    return jnp.concatenate(parts, axis=-3)
 
 
 def _kshift_read(ref, dk: int, out_nk: int, jsl, isl):
     """K-shifted slice of a block ref over the (j, i) window (see
-    :func:`_k_align`)."""
-    return _k_align(ref[:, jsl, isl], dk, out_nk)
+    :func:`_k_align`; leading member-chunk dims pass through)."""
+    return _k_align(ref[..., jsl, isl], dk, out_nk)
 
 
 def _region_mask_block(region: Region, dom: DomainSpec):
@@ -304,7 +347,8 @@ def _inline_offset_temps(stencil: Stencil) -> Stencil:
 
 
 def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
-                       statements, param_names, gaxis: int = 0):
+                       statements, param_names, gaxis: int = 0,
+                       chunk: int = 0):
     written = [w for w in stencil.written() if w in stencil.fields]
     fields = list(stencil.fields)
     temps = stencil.temporaries()
@@ -338,13 +382,15 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
         def make_read(rows):
             # ``rows`` is the current statement's iteration-row count: its
             # target's whole K extent (interface nk+1 / center nk) under
-            # whole-K blocks, else the block size
+            # whole-K blocks, else the block size.  All block addressing is
+            # from the trailing axes so a leading member-chunk dim (blocks
+            # are (C, K, J, I) under ``chunk``) batches straight through.
             def read(name, off):
                 di, dj, dk = off
                 jsl, isl = _hwindow(dom, dj, di)
                 ref = out_refs.get(name, in_refs.get(name))
                 if name in env and (di, dj) == (0, 0):
-                    if dk == 0 and env[name].shape[0] == rows:
+                    if dk == 0 and env[name].shape[-3] == rows:
                         return env[name]
                     if ref is None:
                         # kernel-local temporary on a staggered extent or at
@@ -384,35 +430,38 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                         f"temporary {name!r}")
                 return env[name]
             jsl, isl = _hwindow(dom, dj, di)
-            return ref[:, jsl, isl]
+            return ref[..., jsl, isl]
 
         ei, ej = dom.extend
         nj_w, ni_w = dom.nj + 2 * ej, dom.ni + 2 * ei
+        lead = (chunk,) if chunk else ()
         for st in statements:
             tgt_nk = ksz.get(st.target, nk)
             rows = tgt_nk if whole_k else bk
             kk = (jax.lax.broadcasted_iota(
                 jnp.int32, (rows, nj_w, ni_w), 0) + k0)
+            tshape = lead + (rows, nj_w, ni_w)
             val = _eval_block(st.value, make_read(rows), params,
                               read_col=read_col if whole_k else None, nk=nk)
             klo, khi = st.interval.resolve(tgt_nk)
             jsl, isl = _hwindow(dom, 0, 0)
             tgt_ref = out_refs.get(st.target)
             if tgt_ref is not None:
-                cur = tgt_ref[:, jsl, isl]
+                cur = tgt_ref[..., jsl, isl]
             else:
                 cur = env.get(st.target)
                 if cur is None:
                     cur = jnp.zeros_like(kk, dtype=val.dtype if hasattr(val, "dtype")
                                          else jnp.float32) * 0.0
-            val = jnp.broadcast_to(val, kk.shape).astype(
-                cur.dtype if hasattr(cur, "dtype") else jnp.float32)
+            dt = cur.dtype if hasattr(cur, "dtype") else jnp.float32
+            val = jnp.broadcast_to(val, tshape).astype(dt)
+            cur = jnp.broadcast_to(cur, tshape).astype(dt)
             mask = (kk >= klo) & (kk < khi)
             if st.region is not None:
                 mask = mask & _region_mask_block(st.region, dom)[None]
             new = jnp.where(mask, val, cur)
             if tgt_ref is not None:
-                tgt_ref[:, jsl, isl] = new
+                tgt_ref[..., jsl, isl] = new
             env[st.target] = new
         return
 
@@ -434,7 +483,7 @@ def _horizontal_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 
 def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
-                     param_names):
+                     param_names, chunk: int = 0):
     written = [w for w in stencil.written() if w in stencil.fields]
     fields = list(stencil.fields)
     temps = stencil.temporaries()
@@ -465,6 +514,7 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
         jsl, isl = _hwindow(dom, 0, 0)
         shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
+        lead = (chunk,) if chunk else ()
 
         def ref_of(name):
             if name in out_refs:
@@ -475,7 +525,18 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
         def read_col(name, di, dj):
             js, is_ = _hwindow(dom, dj, di)
-            return ref_of(name)[:, js, is_]
+            return ref_of(name)[..., js, is_]
+
+        # traced-K level addressing: ellipsis + a traced index is not a
+        # Pallas ref indexer, so the leading chunk slice is explicit
+        def lvl_get(ref, k, js, is_):
+            return ref[:, k, js, is_] if chunk else ref[k, js, is_]
+
+        def lvl_set(ref, k, js, is_, v):
+            if chunk:
+                ref[:, k, js, is_] = v
+            else:
+                ref[k, js, is_] = v
 
         for comp in stencil.computations:
             if comp.direction is Direction.PARALLEL:
@@ -494,12 +555,12 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                                       read_col=read_col, nk=nk)
                     klo, khi = st.interval.resolve(rows)
                     tgt = ref_of(st.target)
-                    cur = tgt[:, jsl, isl]
+                    cur = tgt[..., jsl, isl]
                     val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
                     mask = (kk >= klo) & (kk < khi)
                     if st.region is not None:
                         mask = mask & _region_mask_block(st.region, dom)[None]
-                    tgt[:, jsl, isl] = jnp.where(mask, val, cur)
+                    tgt[..., jsl, isl] = jnp.where(mask, val, cur)
                 continue
 
             forward = comp.direction is Direction.FORWARD
@@ -511,7 +572,7 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
             carry_names = sorted(carried & set(comp.written()))
 
             def init_carry():
-                return {n: jnp.zeros(shape2d,
+                return {n: jnp.zeros(lead + shape2d,
                                      dtype=out_refs[n].dtype if n in out_refs
                                      else temp_refs[n].dtype)
                         for n in carry_names}
@@ -527,7 +588,7 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                             and sched.carry_storage == "vreg"
                             and di == 0 and dj == 0):
                         return carry[name]
-                    return ref_of(name)[k + dk, js, is_]
+                    return lvl_get(ref_of(name), k + dk, js, is_)
 
                 new_carry = dict(carry)
                 for st in comp.statements:
@@ -535,14 +596,14 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                     val = _eval_block(st.value, read_lvl, params,
                                       read_col=read_col, nk=nk)
                     tgt = ref_of(st.target)
-                    cur = tgt[k, jsl, isl]
+                    cur = lvl_get(tgt, k, jsl, isl)
                     val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
                     active = (k >= sklo) & (k < skhi)
                     if st.region is not None:
                         rm = _region_mask_block(st.region, dom)
                         val = jnp.where(rm, val, cur)
                     newv = jnp.where(active, val, cur)
-                    tgt[k, jsl, isl] = newv
+                    lvl_set(tgt, k, jsl, isl, newv)
                     if st.target in carry_names:
                         new_carry[st.target] = newv
                 return new_carry
@@ -571,7 +632,8 @@ def _vertical_kernel(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 
 
 def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
-                              sched: Schedule, param_names, gaxis: int = 0):
+                              sched: Schedule, param_names, gaxis: int = 0,
+                              chunk: int = 0):
     """K-blocked marching schedule for single-direction vertical solvers.
 
     The TPU grid executes *sequentially*, so the K dimension becomes a grid
@@ -598,6 +660,7 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
     njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
     shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
     jsl, isl = _hwindow(dom, 0, 0)
+    lead = (chunk,) if chunk else ()
 
     def kernel(*refs):
         n_in = len(fields) + len(param_names)
@@ -614,9 +677,9 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
         g = pl.program_id(gaxis)
         # grid step g is the g-th block in *marching order*; the index maps
         # place it top-down (FORWARD) or bottom-up (BACKWARD).  Under a
-        # member grid axis (gaxis=1) g still runs 0..n_blocks-1 *per
-        # member*, so the first-block carry zeroing below resets at every
-        # member boundary — no carry leaks between members.
+        # member (or member-chunk) grid axis (gaxis=1) g still runs
+        # 0..n_blocks-1 *per member/chunk*, so the first-block carry zeroing
+        # below resets at every member/chunk boundary — no carry leaks.
         blk = g if forward else (n_blocks - 1 - g)
         k0 = blk * bk
 
@@ -630,12 +693,23 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
         def dtype_of(name):
             return ref_of(name).dtype
 
+        # traced-K block-local addressing (the chunk dim, when present, is
+        # an explicit leading slice — ellipsis can't mix with a traced index)
+        def lvl_get(ref, local, js, is_):
+            return ref[:, local, js, is_] if chunk else ref[local, js, is_]
+
+        def lvl_set(ref, local, js, is_, v):
+            if chunk:
+                ref[:, local, js, is_] = v
+            else:
+                ref[local, js, is_] = v
+
         # block-boundary carry: the previous block's last marched level,
         # staged through scratch; zeros on the first marching step (those
         # reads are dead under the interval masks, but the selects must see
         # well-defined numbers, not uninitialized VMEM)
         first = g == 0
-        carry0 = {n: jnp.where(first, jnp.zeros(shape2d, dtype_of(n)),
+        carry0 = {n: jnp.where(first, jnp.zeros(lead + shape2d, dtype_of(n)),
                                carry_refs[n][...])
                   for n in carried}
 
@@ -650,7 +724,7 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
                     # with zero horizontal offset: always the carry
                     return carry[name]
                 js, is_ = _hwindow(dom, dj, di)
-                return ref_of(name)[local, js, is_]
+                return lvl_get(ref_of(name), local, js, is_)
 
             level_vals: dict[str, Any] = {}
             for comp in stencil.computations:
@@ -658,14 +732,14 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
                     sklo, skhi = st.interval.resolve(nk)
                     val = _eval_block(st.value, read_lvl, params)
                     tgt = ref_of(st.target)
-                    cur = tgt[local, jsl, isl]
+                    cur = lvl_get(tgt, local, jsl, isl)
                     val = jnp.broadcast_to(val, cur.shape).astype(cur.dtype)
                     active = (k >= sklo) & (k < skhi)
                     if st.region is not None:
                         rm = _region_mask_block(st.region, dom)
                         val = jnp.where(rm, val, cur)
                     newv = jnp.where(active, val, cur)
-                    tgt[local, jsl, isl] = newv
+                    lvl_set(tgt, local, jsl, isl, newv)
                     level_vals[st.target] = newv
 
             new_carry = {}
@@ -673,7 +747,7 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
                 if n in level_vals:
                     new_carry[n] = level_vals[n]
                 else:  # carried input (or untouched temp): this level's row
-                    new_carry[n] = ref_of(n)[local, jsl, isl]
+                    new_carry[n] = lvl_get(ref_of(n), local, jsl, isl)
             return new_carry
 
         final = jax.lax.fori_loop(0, bk, body, carry0)
@@ -698,22 +772,27 @@ def _vertical_kernel_kblocked(stencil: Stencil, dom: DomainSpec,
 
 def _compile_kblocked(stencil: Stencil, dom: DomainSpec, sched: Schedule,
                       param_names, dtype, interpret: bool,
-                      n_members: int | None = None):
+                      n_members: int | None = None, member_chunk: int = 0):
     kernel, grid, in_specs, out_specs, written, temps, carried = \
         _vertical_kernel_kblocked(stencil, dom, sched, param_names,
-                                  gaxis=1 if n_members else 0)
+                                  gaxis=1 if n_members else 0,
+                                  chunk=member_chunk)
     njp, nip = dom.nj + 2 * dom.halo, dom.ni + 2 * dom.halo
     shape2d = (dom.nj + 2 * dom.extend[1], dom.ni + 2 * dom.extend[0])
     # temporaries hold only the current block's rows; carry planes persist
-    # across the sequential grid — both VMEM scratch, never HBM.  Per-member
-    # scratch needs no member axis: the member grid axis is outermost and
-    # sequential, and the carry zeroes itself at each member's first block.
-    scratch = ([pltpu.VMEM((sched.block_k, njp, nip), dtype) for _ in temps] +
-               [pltpu.VMEM(shape2d, dtype) for _ in carried])
+    # across the sequential grid — both VMEM scratch, never HBM.  The
+    # member/chunk grid axis is outermost and sequential, so scratch needs
+    # no member axis beyond the in-block chunk dim: the carry zeroes itself
+    # at each member's/chunk's first block.
+    slead = (member_chunk,) if member_chunk else ()
+    scratch = ([pltpu.VMEM(slead + (sched.block_k, njp, nip), dtype)
+                for _ in temps] +
+               [pltpu.VMEM(slead + shape2d, dtype) for _ in carried])
     if n_members:
-        grid = (n_members,) + grid
-        in_specs = _member_specs(in_specs)
-        out_specs = _member_specs(out_specs)
+        m_steps = n_members // member_chunk if member_chunk else n_members
+        grid = (m_steps,) + grid
+        in_specs = _member_specs(in_specs, chunk=member_chunk)
+        out_specs = _member_specs(out_specs, chunk=member_chunk)
     lead = (n_members,) if n_members else ()
 
     def shape_of(name):
@@ -744,7 +823,7 @@ def _compile_kblocked(stencil: Stencil, dom: DomainSpec, sched: Schedule,
 def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
                    schedule: Schedule | None = None, dtype=jnp.float32,
                    interpret: bool = True, scratch_temps: bool = True,
-                   n_members: int | None = None):
+                   n_members: int | None = None, member_chunk: int = 0):
     """Compile a stencil into a Pallas-backed functional callable.
 
     ``interpret=True`` executes on CPU for validation; on TPU pass False.
@@ -758,10 +837,27 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
     outermost *sequential* member dimension, and every BlockSpec maps the
     member grid index onto a squeezed leading block dim — the kernel body
     is untouched and per-member blocks/VMEM are identical to M=1.
+
+    ``member_chunk=C`` (requires ``n_members``, M divisible by C) is the
+    hybrid ``batch="vmap:C,grid"`` lowering: the outermost grid axis walks
+    M//C member *chunks*, each block carries a non-squeezed leading C dim,
+    and kernel bodies batch the chunk through every statement.  Per-
+    invocation VMEM scales by C (``vmem_footprint(member_chunk=C)``).
     """
+    if member_chunk:
+        if not n_members:
+            raise ValueError("member_chunk requires n_members")
+        member_chunk = min(member_chunk, n_members)
+        if n_members % member_chunk:
+            raise ValueError(
+                f"member_chunk={member_chunk} must divide "
+                f"n_members={n_members} (callers pad the member axis)")
+        if member_chunk == n_members and n_members == 1:
+            member_chunk = 0
     sched = schedule or default_schedule(stencil, (dom.nk, dom.nj, dom.ni))
     param_names = list(stencil.params)
     lead = (n_members,) if n_members else ()
+    m_steps = (n_members // member_chunk if member_chunk else n_members)
 
     def shape_of(name):
         return lead + dom.padded_shape(stencil.is_interface(name))
@@ -774,27 +870,30 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
         # scratch (the GPU backend's parallel thread-block grid cannot
         # order blocks, so it never enumerates this schedule).
         return _compile_kblocked(stencil, dom, sched, param_names, dtype,
-                                 interpret, n_members=n_members)
+                                 interpret, n_members=n_members,
+                                 member_chunk=member_chunk)
 
     if stencil.is_vertical_solver():
         kernel, grid, in_specs, out_specs, written, temps = _vertical_kernel(
-            stencil, dom, sched, param_names)
+            stencil, dom, sched, param_names, chunk=member_chunk)
 
         # scratch refs arrive after the outputs in kernel argument order —
         # the same positions temporaries-as-outputs occupy, so the kernel
         # body is agnostic to which mechanism backs them
+        slead = (member_chunk,) if member_chunk else ()
         if scratch_temps:
-            scratch = [pltpu.VMEM(dom.padded_shape(stencil.is_interface(t)),
-                                  dtype) for t in temps]
+            scratch = [pltpu.VMEM(
+                slead + dom.padded_shape(stencil.is_interface(t)),
+                dtype) for t in temps]
         else:
             scratch = []
             out_specs = out_specs + [
                 pl.BlockSpec(dom.padded_shape(stencil.is_interface(t)),
                              lambda _: (0, 0, 0)) for t in temps]
         if n_members:
-            grid = (n_members,) + grid
-            in_specs = _member_specs(in_specs)
-            out_specs = _member_specs(out_specs)
+            grid = (m_steps,) + grid
+            in_specs = _member_specs(in_specs, chunk=member_chunk)
+            out_specs = _member_specs(out_specs, chunk=member_chunk)
 
         def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):
             params = dict(params or {})
@@ -830,11 +929,11 @@ def compile_pallas(stencil: Stencil, dom: DomainSpec, *,
     for grp in groups:
         kernel, grid, in_specs, out_specs, written, bk = _horizontal_kernel(
             stencil, dom, sched, grp, param_names,
-            gaxis=1 if n_members else 0)
+            gaxis=1 if n_members else 0, chunk=member_chunk)
         if n_members:
-            grid = (n_members,) + grid
-            in_specs = _member_specs(in_specs)
-            out_specs = _member_specs(out_specs)
+            grid = (m_steps,) + grid
+            in_specs = _member_specs(in_specs, chunk=member_chunk)
+            out_specs = _member_specs(out_specs, chunk=member_chunk)
         compiled.append((kernel, grid, in_specs, out_specs, written))
 
     def run(fields: Mapping[str, Any], params: Mapping[str, Any] | None = None):

@@ -18,6 +18,7 @@ from ..stencil.domain import DomainSpec
 from ..stencil.ir import Stencil
 from ..stencil.schedule import Schedule
 from .base import Backend, Runner, register_backend
+from .batching import BatchSpec, pad_wrapped, parse_batch, scan_chunked
 from .lowering_pallas import compile_pallas
 
 
@@ -28,29 +29,52 @@ class PallasTPUBackend(Backend):
     #: the GPU backend opts out — the TPU memory-space spec has no Triton
     #: equivalent — and keeps temporaries as extra outputs instead
     scratch_temps = True
+    #: this backend can place the member axis (and chunk loops) on its grid
+    member_grid = True
 
     def compile_stencil(self, stencil: Stencil, dom: DomainSpec, *,
                         schedule: Schedule | None = None,
                         hardware: Hardware | str | None = None,
                         interpret: bool = True, dtype=None,
                         n_members: int | None = None,
-                        batch: str = "grid") -> Runner:
+                        batch: "str | BatchSpec" = "grid") -> Runner:
         if schedule is None:
             schedule = self.default_schedule(
                 stencil, (dom.nk, dom.nj, dom.ni), hardware)
         kwargs = {} if dtype is None else {"dtype": dtype}
-        if n_members and batch == "vmap":
+
+        def lower(members=None, chunk=0):
+            return compile_pallas(stencil, dom, schedule=schedule,
+                                  interpret=interpret,
+                                  scratch_temps=self.scratch_temps,
+                                  n_members=members, member_chunk=chunk,
+                                  **kwargs)
+
+        if not n_members:
+            return lower()
+        spec = parse_batch(batch)
+        if spec.chunk:
+            C = spec.chunk_for(n_members)
+            padded = spec.padded_members(n_members)
+            if spec.outer == "grid":
+                # hybrid: chunk loop on the outermost sequential grid axis,
+                # C-member blocks inside each kernel
+                fn = lower(members=padded, chunk=C)
+                return fn if padded == n_members else \
+                    pad_wrapped(fn, n_members, padded)
+            if C >= n_members:
+                spec = BatchSpec(inner=spec.inner)  # one chunk: plain inner
+            else:
+                # outer="scan": program-of-chunks over the inner lowering
+                inner = (jax.vmap(lower(), in_axes=(0, None))
+                         if spec.inner == "vmap" else lower(members=C))
+                return scan_chunked(inner, n_members, C)
+        if spec.inner == "vmap":
             # A/B baseline against the member grid axis: the single-member
             # kernel under jax.vmap (pallas_call's batching rule prepends
             # its own grid dimension)
-            fn = compile_pallas(stencil, dom, schedule=schedule,
-                                interpret=interpret,
-                                scratch_temps=self.scratch_temps, **kwargs)
-            return jax.vmap(fn, in_axes=(0, None))
-        return compile_pallas(stencil, dom, schedule=schedule,
-                              interpret=interpret,
-                              scratch_temps=self.scratch_temps,
-                              n_members=n_members, **kwargs)
+            return jax.vmap(lower(), in_axes=(0, None))
+        return lower(members=n_members)
 
 
 class PallasGPUBackend(PallasTPUBackend):

@@ -238,6 +238,10 @@ class StencilProgram:
         ``"pallas"`` spelling aliases to ``"pallas-tpu"``), and
         ``opt_level`` selects the automatic optimization ladder
         (:mod:`repro.core.passes`) applied to a clone of this program.
+        ``n_members``/``batch`` thread the ensemble axis through every
+        node; ``batch`` takes the full chunk-spec grammar (``"vmap"``,
+        ``"grid"``, ``"vmap:C"``, ``"vmap:C,grid"``, ``"grid:C"``,
+        ``"vmap:auto"`` — see :func:`compile_program`).
         """
         from .backend import compile_program
 

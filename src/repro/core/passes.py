@@ -71,6 +71,9 @@ class PassContext:
     hardware: Hardware | str | None = None
     cache: object | None = None
     n_members: int = 1
+    #: inner chunk width of a hybrid member-chunked lowering (0 = unchunked);
+    #: the schedule tuner prices C-member-wide VMEM blocks when set
+    member_chunk: int = 0
 
     def hw(self) -> Hardware:
         return resolve_hardware(self.hardware)
@@ -270,7 +273,8 @@ def _tune_schedules(program: StencilProgram, ctx: PassContext) -> int:
     for node in program.all_nodes():
         dom = program.node_dom(node)
         results = tune_stencil(node.stencil, dom, hw=hw, backend=ctx.backend,
-                               n_members=ctx.n_members, cache=ctx.cache)
+                               n_members=ctx.n_members,
+                               member_chunk=ctx.member_chunk, cache=ctx.cache)
         if results and results[0].cost != float("inf"):
             node.schedule = results[0].schedule
             n += 1
@@ -295,6 +299,7 @@ def optimize_program(program: StencilProgram, *, opt_level: int = 3,
                      passes: tuple[str, ...] | None = None,
                      inplace: bool = False,
                      n_members: int = 1,
+                     member_chunk: int = 0,
                      ) -> tuple[StencilProgram, PipelineReport]:
     """Run the opt ladder for ``opt_level`` (or an explicit ``passes`` list)
     over a clone of ``program``; returns ``(optimized, report)``.
@@ -310,7 +315,8 @@ def optimize_program(program: StencilProgram, *, opt_level: int = 3,
         kernels_before=len(prog.all_nodes()),
         hbm_bytes_before=program_bytes(prog))
     ctx = PassContext(backend=backend, hardware=hw, cache=cache,
-                      n_members=max(1, n_members))
+                      n_members=max(1, n_members),
+                      member_chunk=max(0, member_chunk))
     for name in names:
         fn = get_pass(name)
         t0 = time.perf_counter()

@@ -144,15 +144,21 @@ def kblocked_applies(stencil: Stencil, sched: Schedule, nk: int, *,
 
 
 def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
-                   dtype_bytes: int = 4) -> int:
+                   dtype_bytes: int = 4, member_chunk: int = 0) -> int:
     """Bytes of fast on-chip memory one kernel invocation touches under this
     schedule (VMEM block on TPU; shared-memory tile on GPU).  The byte
     count itself is hardware-independent; callers compare it against
     ``hw.vmem_bytes``.  K-interface buffers carry one extra level
     (they only ever appear in whole-K blocks — interface and center fields
     never co-tile in K).  K-blocked vertical solvers hold ``block_k`` rows
-    per field plus one carry plane per loop-carried field."""
+    per field plus one carry plane per loop-carried field.
+
+    ``member_chunk=C`` prices a chunk-batched invocation
+    (``batch="vmap:C,grid"``): every block and carry buffer gains a leading
+    C-member extent, so the footprint scales by C — the feasibility limit
+    on how wide the inner batch of the hybrid chunk loop can go."""
     nk, nj, ni = dom_shape
+    mult = max(1, member_chunk)
     bi = sched.block_i or ni
     bj = sched.block_j or nj
     vertical = stencil.is_vertical_solver()
@@ -166,9 +172,10 @@ def vmem_footprint(stencil: Stencil, sched: Schedule, dom_shape,
     total = 0
     for name in tuple(stencil.fields) + tuple(stencil.temporaries()):
         k_size = bk + 1 if (whole_k and stencil.is_interface(name)) else bk
-        total += bi * bj * k_size * dtype_bytes
+        total += mult * bi * bj * k_size * dtype_bytes
     if vertical and not whole_k:
-        total += len(solver_carried_fields(stencil)) * bi * bj * dtype_bytes
+        total += (mult * len(solver_carried_fields(stencil))
+                  * bi * bj * dtype_bytes)
     return total
 
 

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import StencilProgram, compile_program, donation_supported
 from repro.core.backend import register_cache_clear
+from repro.core.backend.batching import BatchSpec, parse_batch, scan_chunked
 from repro.core.stencil import DomainSpec
 from . import stencils as S
 from .halo import exchange_reference, make_halo_exchanger
@@ -505,18 +506,32 @@ def _remap_iteration(cfg, runners, params, halo_fn, state, metrics,
 
 def _assemble_step(cfg: FV3Config, progs, runners, runners_v, halo_fn,
                    metrics, params, counters, *, unroll: bool,
-                   donate: bool) -> Callable:
+                   donate: bool,
+                   member_chunks: tuple[int, int] | None = None) -> Callable:
     """Shared tail of the sequential/ensemble step factories: the
     scan-rolled remap loop behind one jit, with counters and the standard
     introspection attributes.  Keeping this in one place is what keeps the
-    ensemble and single-member paths bit-identical by construction."""
-    def _step(state: dict) -> dict:
+    ensemble and single-member paths bit-identical by construction.
+
+    ``member_chunks=(M, C)`` wraps the WHOLE step in a member chunk loop:
+    the runners (compiled C-wide) execute every substep for one C-member
+    chunk before the next chunk starts — a ``lax.scan`` over ceil(M/C)
+    chunks, so only one chunk's transients/halo working set is ever live.
+    With ``donate=True`` the scan carry double-buffers through the same
+    storage: the M-member state streams through a C-member footprint."""
+    def _inner(state: dict) -> dict:
         def remap_body(st):
             return _remap_iteration(cfg, runners_v, params, halo_fn, st,
                                     metrics, unroll=unroll,
                                     counters=counters)
 
         return _scan_substeps(remap_body, dict(state), cfg.k_split, unroll)
+
+    if member_chunks:
+        n_members, chunk = member_chunks
+        _step = scan_chunked(lambda ch, _ps: _inner(ch), n_members, chunk)
+    else:
+        _step = _inner
 
     jitted = (jax.jit(_step, donate_argnums=(0,))
               if donate and donation_supported() else jax.jit(_step))
@@ -597,29 +612,55 @@ def make_step_ensemble(cfg: FV3Config, n_members: int, *,
     what changes is dispatch structure: one jitted step, one kernel per
     fused group, launch overhead amortized across members.
 
-    ``batch`` defaults per backend ("vmap" for jnp, "grid" for Pallas).
+    ``batch`` defaults per backend ("vmap" for jnp, "grid" for Pallas) and
+    accepts the full chunk-spec grammar of :func:`compile_program`.  A
+    chunked scan-outer spec (``"vmap:C"``) lifts the chunk loop to the
+    *step* level: runners compile C-wide and the whole step — halo
+    exchanges, acoustic scan, remap — runs chunk by chunk under one
+    ``lax.scan``, so only one C-member working set is live at a time.
+    With ``donate=True`` (on donation-capable platforms) the M-member
+    state streams through that C-member footprint in place — the
+    large-ensemble memory-scaling path.  ``"vmap:C,grid"`` instead keeps
+    the step M-wide and pushes the chunk loop into each Pallas kernel's
+    outermost grid axis.
     """
     if batch is None:
         batch = "grid" if str(backend).startswith("pallas") else "vmap"
+    spec = parse_batch(batch)
+    member_chunks = None
+    prog_members, prog_batch = n_members, spec
+    if spec.chunk > 0:  # explicit chunk width (AUTO resolves per program)
+        C = spec.chunk_for(n_members)
+        grid_outer = (spec.outer == "grid"
+                      and str(backend).startswith("pallas"))
+        if C < n_members and not grid_outer:
+            # step-level chunk loop: compile everything C-wide, scan chunks
+            member_chunks = (n_members, C)
+            prog_members, prog_batch = C, BatchSpec(inner=spec.inner)
     dom = cfg.seq_dom()
     progs, runners = _make_programs(cfg, dom, backend,
                                     _resolve_opt_level(optimize, opt_level),
-                                    hardware, n_members=n_members,
-                                    batch=batch)
+                                    hardware, n_members=prog_members,
+                                    batch=prog_batch)
     params = default_params(cfg)
     counters = {"acoustic_traces": 0, "runner_dispatches": 0,
                 "step_calls": 0}
-    # member-batched runners take (M, nk, J, I): tiles vmap over axis 1
+    # member-batched runners take (C|M, nk, J, I): tiles vmap over axis 1
     runners_v = tuple(_counting_tile_runner(r, counters, axis=1)
                       for r in runners)
     base_metrics = _metric_terms(cfg, (6,) + dom.padded_shape())
-    metrics = {k: jnp.broadcast_to(v, (n_members,) + v.shape)
+    metrics = {k: jnp.broadcast_to(v, (prog_members,) + v.shape)
                for k, v in base_metrics.items()}
     step = _assemble_step(cfg, progs, runners, runners_v,
                           _reference_halo_fn(cfg), metrics, params, counters,
-                          unroll=unroll, donate=donate)
+                          unroll=unroll, donate=donate,
+                          member_chunks=member_chunks)
     step.n_members = n_members
-    step.batch = batch
+    step.batch = spec.token
+    step.member_chunk = member_chunks[1] if member_chunks else \
+        (runners[0].member_chunk if n_members else None)
+    step.n_chunks = (-(-n_members // member_chunks[1])
+                     if member_chunks else runners[0].n_chunks)
     return step
 
 
@@ -628,6 +669,8 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
                           opt_level: int | None = None,
                           ensemble: bool = False,
                           member_axis: str | None = None,
+                          n_members: int | None = None,
+                          batch: str | None = None,
                           overlap: bool = True,
                           unroll: bool = False) -> Callable:
     """shard_map'd physics step over mesh ("tile","y","x") — or, multi-pod,
@@ -637,25 +680,48 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     ``member_axis`` names an extra *leading* mesh axis members shard over,
     orthogonally to the ``tile/y/x`` domain decomposition — each member
     group runs an independent dycore; no collective ever crosses the member
-    axis (the halo ppermutes name only ``tile/y/x``).  The mesh's member
-    extent must equal the ensemble size (one member per member-group).
-    The legacy ``ensemble=True`` flag is shorthand for
-    ``member_axis="ens"``.
+    axis (the halo ppermutes name only ``tile/y/x``).  The legacy
+    ``ensemble=True`` flag is shorthand for ``member_axis="ens"``.
+
+    Without ``n_members`` the mesh's member extent must equal the ensemble
+    size (one member per member-group).  ``n_members=M`` composes the
+    sharded and batched ensemble lowerings: M must be a multiple of the
+    member-axis extent D, each group owns ``ml = M // D`` members, and the
+    per-group dycore compiles member-batched over ``ml`` with ``batch``
+    (full chunk-spec grammar — e.g. ``"vmap:4,grid"`` chunk-batches within
+    each shard).  A 64-member ensemble on a 4-group mesh thus runs 16
+    members per group, chunked 4 at a time inside each kernel.
 
     Input state: per-rank local blocks laid out
-    ([member,] tile, y, x, nk, nl+2h, nl+2h).
+    ([member…,] tile, y, x, nk, nl+2h, nl+2h) — the member axis sharded
+    over ``member_axis``, ``ml`` members contiguous per shard.
 
     ``overlap=True`` hides halo-exchange latency by splitting each exchanged
     program's domain (:mod:`repro.fv3.overlap`): interior compute runs from
     the pre-exchange state concurrently with the ppermute rounds, edge
     strips are recomputed afterwards.  It degrades automatically to the
     sequential exchange-then-compute ordering when the local interior is
-    too small (``n_local <= 2*halo``) to hold a strip-free core.
+    too small (``n_local <= 2*halo``) to hold a strip-free core, and is
+    skipped when groups hold more than one member (the overlap splitter is
+    single-member; the member batch already fills the schedule).
     """
     from jax.sharding import PartitionSpec as P
 
     if ensemble and member_axis is None:
         member_axis = "ens"
+    ml = 1
+    if n_members is not None:
+        if member_axis is None:
+            raise ValueError("n_members requires member_axis (an ensemble "
+                             "mesh axis to shard members over)")
+        d = mesh.shape[member_axis]
+        if n_members % d:
+            raise ValueError(
+                f"n_members={n_members} must be a multiple of the "
+                f"member-axis extent {d}")
+        ml = n_members // d
+    if batch is None:
+        batch = "grid" if str(backend).startswith("pallas") else "vmap"
 
     dom = cfg.local_dom()
     dec = cfg.decomposition()
@@ -666,12 +732,13 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     py, px = cfg.layout
     nl, h, nk = cfg.n_local, cfg.halo, cfg.nk
 
+    memb = {"n_members": ml, "batch": batch} if ml > 1 else {}
     # the remap program is purely vertical (no horizontal reads), so it
     # never participates in halo/compute overlap — compile it plain
     run_remap = compile_program(progs[3], backend, hardware=hardware,
-                                interpret=True, opt_level=lvl)
+                                interpret=True, opt_level=lvl, **memb)
     ov = None
-    if overlap:
+    if overlap and ml == 1:
         cands = tuple(
             make_overlapped_runner(p, backend=backend, hardware=hardware,
                                    opt_level=lvl)
@@ -686,7 +753,7 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     else:
         runners = tuple(
             compile_program(p, backend, hardware=hardware, interpret=True,
-                            opt_level=lvl)
+                            opt_level=lvl, **memb)
             for p in progs[:3]) + (run_remap,)
 
     def halo_fn(st, names):
@@ -696,18 +763,22 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         return {**st, **out}
 
     lead = 4 if member_axis else 3
-    metrics = _metric_terms(cfg, dom.padded_shape())
+    base_metrics = _metric_terms(cfg, dom.padded_shape())
+    metrics = ({k: jnp.broadcast_to(v, (ml,) + v.shape)
+                for k, v in base_metrics.items()} if ml > 1 else base_metrics)
+    local_shape = ((ml, nk, nl + 2 * h, nl + 2 * h) if ml > 1
+                   else (nk, nl + 2 * h, nl + 2 * h))
 
     def local_step(state: dict) -> dict:
-        st = {k: v.reshape(nk, nl + 2 * h, nl + 2 * h)
-              for k, v in state.items()}
+        st = {k: v.reshape(local_shape) for k, v in state.items()}
 
         def remap_body(s):
             return _remap_iteration(cfg, runners, params, halo_fn, s,
                                     metrics, overlap=ov, unroll=unroll)
 
         st = _scan_substeps(remap_body, st, cfg.k_split, unroll)
-        return {k: v.reshape((1,) * lead + (nk, nl + 2 * h, nl + 2 * h))
+        return {k: v.reshape((ml,) + (1,) * (lead - 1)
+                             + (nk, nl + 2 * h, nl + 2 * h))
                 for k, v in st.items()}
 
     spec = (P(member_axis, "tile", "y", "x") if member_axis
@@ -720,4 +791,14 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
         in_specs=(dict.fromkeys(fields, spec),),
         out_specs=dict.fromkeys(fields, spec),
     )
-    return jax.jit(sharded)
+    jitted = jax.jit(sharded)
+
+    def step(state: dict) -> dict:
+        return jitted(state)
+
+    step.n_members = n_members
+    step.members_per_group = ml
+    step.batch = batch if ml > 1 else None
+    step.member_chunk = runners[0].member_chunk if ml > 1 else None
+    step.overlapped = ov is not None
+    return step

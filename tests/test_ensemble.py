@@ -23,7 +23,8 @@ from repro.core.stencil.schedule import Schedule, solver_k_blockable
 from repro.fv3 import stencils as S
 from repro.fv3.dyncore import (FV3Config, build_csw_program,
                                build_remap_program, default_params,
-                               make_step_ensemble, make_step_sequential)
+                               make_step_distributed, make_step_ensemble,
+                               make_step_sequential)
 from repro.fv3.halo import exchange_reference
 from repro.fv3.state import ensemble_state, init_state
 
@@ -154,6 +155,142 @@ def test_batch_mode_validation():
         compile_program(p, "jnp", n_members=2, batch="pmap")
 
 
+@pytest.mark.parametrize("bad", [
+    "vmap:0", "vmap:-3", "vmap:x", "vmap:2,foo", "grid:2,grid",
+    "vmap:2,scan,extra", "",
+])
+def test_chunk_spec_validation(bad):
+    """Malformed chunk specs fail loudly at parse time, never silently
+    degrade — and every message names the ``batch`` argument."""
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    p = _fvt_program(dom)
+    with pytest.raises(ValueError, match="batch"):
+        compile_program(p, "jnp", n_members=2, batch=bad)
+
+
+def test_chunk_spec_tokens_round_trip():
+    from repro.core import parse_batch
+
+    for s, tok in [("vmap", "vmap"), ("grid", "grid"), ("vmap:4", "vmap:4"),
+                   ("vmap:4,scan", "vmap:4"), ("vmap:4,grid", "vmap:4,grid"),
+                   ("grid:4", "grid:4"), ("vmap:auto", "vmap:auto")]:
+        spec = parse_batch(s)
+        assert spec.token == tok
+        assert parse_batch(spec.token) == spec
+
+
+# ---------------------------------------------------------------------------
+# Hybrid member chunking: chunked lowering == per-member loop, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,batch", [
+    ("jnp", "vmap:2"), ("jnp", "grid:2"),
+    ("pallas-tpu", "vmap:2"), ("pallas-tpu", "vmap:2,grid"),
+    ("pallas-tpu", "grid:2"),
+])
+def test_chunked_fvt_matches_member_loop(backend, batch):
+    """All three chunked lowerings (program-level scan over vmap chunks,
+    scan over member-grid chunks, in-kernel grid chunk loop) are
+    bit-identical to the per-member loop — including M=5 not divisible by
+    C=2 (replicate-padded last chunk, pad sliced off)."""
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    p = _fvt_program(dom)
+    M = 5
+    fields = _member_fields(p.fields, dom, M)
+    single = compile_program(p, backend)
+    singles = _per_member(single, fields, FVT_PARAMS, M)
+    fn = compile_program(p, backend, n_members=M, batch=batch)
+    out = fn(dict(fields), FVT_PARAMS)
+    _assert_bit_equal(out, singles, keys=["qout"])
+    # chunking restructures the launch, never the kernel set
+    assert fn.n_kernels == single.n_kernels
+    assert fn.member_chunk == 2 and fn.n_chunks == 3
+
+
+@pytest.mark.parametrize("backend,opt_level", [
+    ("jnp", 0), ("jnp", 3), ("pallas-tpu", 0), ("pallas-tpu", 3),
+])
+def test_chunked_remap_interface_and_search(backend, opt_level):
+    """K-interface fields and the ``index_search`` remap under the chunked
+    member axis (the hardest lowering: per-chunk carry reset in marching
+    kernels, interface extents in C-member blocks)."""
+    cfg = FV3Config(npx=6, nk=8, halo=6, n_tracers=0)
+    dom = cfg.seq_dom()
+    prog = build_remap_program(cfg, dom, fields=("pt",))
+    params = default_params(cfg)
+    M = 3
+    fields = _member_fields(("delp", "pt"), dom, M)
+    single = compile_program(prog, backend, opt_level=opt_level)
+    singles = _per_member(single, fields, params, M)
+    batch = "vmap:2,grid" if backend.startswith("pallas") else "vmap:2"
+    fn = compile_program(prog, backend, opt_level=opt_level, n_members=M,
+                         batch=batch)
+    out = fn(dict(fields), params)
+    _assert_bit_equal(out, singles, keys=["delp_out", "pt_out"])
+    assert fn.n_kernels == single.n_kernels
+
+
+def test_chunked_kblocked_marching_carry_reset():
+    """K-blocked marching solver with C-member blocks: the scratch carry is
+    (C, J, I) and resets at each chunk's first K block — no carry leaks
+    between chunks or members."""
+    cfg = FV3Config(npx=6, nk=16, halo=6, n_tracers=0)
+    dom = cfg.seq_dom()
+    p = StencilProgram("pe_fwd_chunk", dom)
+    p.declare("delp")
+    p.declare("pe")
+    node = p.add(S.precompute_pe, {"delp": "delp", "pe": "pe"})
+    p.propagate_extents()
+    assert solver_k_blockable(node.stencil)
+    sch = Schedule(block_k=4, k_as_grid=False)
+    M = 4
+    fields = _member_fields(("delp",), dom, M)
+    params = {"ptop": 10.0}
+    single = compile_program(p, "pallas-tpu",
+                             schedule_overrides={"precompute_pe": sch})
+    singles = _per_member(single, fields, params, M)
+    fn = compile_program(p, "pallas-tpu", n_members=M, batch="vmap:2,grid",
+                         schedule_overrides={"precompute_pe": sch})
+    out = fn(dict(fields), params)
+    _assert_bit_equal(out, singles, keys=["pe"])
+
+
+def test_auto_chunk_resolves_through_cost_model():
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    p = _fvt_program(dom)
+    M = 4
+    fields = _member_fields(p.fields, dom, M)
+    fn = compile_program(p, "pallas-tpu", n_members=M, batch="vmap:auto")
+    out = fn(dict(fields), FVT_PARAMS)
+    single = compile_program(p, "pallas-tpu")
+    _assert_bit_equal(out, _per_member(single, fields, FVT_PARAMS, M),
+                      keys=["qout"])
+    # the unresolved sentinel never reaches the backend
+    assert fn.batch != "vmap:auto" and fn.batch.startswith("vmap")
+
+
+def test_chunked_donation_streams_state():
+    """``donate=True`` on a chunked program: donation engages exactly when
+    the platform honors it (TPU/GPU), degrades to plain jit on CPU — and
+    either way the chunked result stays bit-identical."""
+    from repro.core import donation_supported
+
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    p = _fvt_program(dom)
+    M = 4
+    fields = _member_fields(p.fields, dom, M)
+    plain = compile_program(p, "jnp", n_members=M, batch="vmap:2")
+    ref = plain(dict(fields), FVT_PARAMS)
+    fn = compile_program(p, "jnp", n_members=M, batch="vmap:2", donate=True)
+    assert fn.donated == donation_supported()
+    out = fn({k: jnp.array(v) for k, v in fields.items()}, FVT_PARAMS)
+    assert np.array_equal(np.asarray(out["qout"]), np.asarray(ref["qout"]))
+    if not donation_supported():
+        # CPU: inputs must remain readable after the call (plain jit)
+        _ = [np.asarray(v) for v in fields.values()]
+
+
 # ---------------------------------------------------------------------------
 # Batched reference halo exchange
 # ---------------------------------------------------------------------------
@@ -215,6 +352,107 @@ def test_ensemble_step_bitmatches_member_loop_pallas(opt_level):
     assert step_e.n_kernels == step_s.n_kernels
 
 
+@pytest.mark.parametrize("opt_level", [0, 3])
+def test_chunked_ensemble_step_bitmatches_jnp(opt_level):
+    """Step-level chunking: the whole step (halo exchanges, acoustic scan,
+    remap) runs chunk by chunk, M=3 not divisible by C=2 — bit-identical to
+    the per-member loop."""
+    cfg = _step_cfg()
+    M = 3
+    ens0 = ensemble_state(cfg, M)
+    step_e = make_step_ensemble(cfg, M, batch="vmap:2", opt_level=opt_level)
+    assert step_e.member_chunk == 2 and step_e.n_chunks == 2
+    out_e = step_e(dict(ens0))
+    step_s = make_step_sequential(cfg, opt_level=opt_level)
+    singles = [step_s({k: v[m] for k, v in ens0.items()}) for m in range(M)]
+    _assert_bit_equal(out_e, singles)
+    assert step_e.n_kernels == step_s.n_kernels
+
+
+@pytest.mark.slow
+def test_chunked_ensemble_step_bitmatches_pallas():
+    """The hybrid in-kernel chunk loop (``"vmap:2,grid"``) through the full
+    Pallas ensemble step."""
+    cfg = _step_cfg()
+    M = 4
+    ens0 = ensemble_state(cfg, M)
+    step_e = make_step_ensemble(cfg, M, backend="pallas-tpu",
+                                batch="vmap:2,grid", opt_level=3)
+    assert step_e.batch == "vmap:2,grid" and step_e.member_chunk == 2
+    out_e = step_e(dict(ens0))
+    step_s = make_step_sequential(cfg, backend="pallas-tpu", opt_level=3)
+    singles = [step_s({k: v[m] for k, v in ens0.items()}) for m in range(M)]
+    _assert_bit_equal(out_e, singles)
+    assert step_e.n_kernels == step_s.n_kernels
+
+
+@pytest.mark.slow
+def test_chunked_member_sharded_matches_unsharded():
+    """Composition: M=4 members shard over a 2-group member mesh axis AND
+    chunk-batch (C=1) within each group — every member bit-matches the
+    unsharded sequential step (subprocess with fake devices, same idiom as
+    test_distributed)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    code = """
+import numpy as np, jax
+from repro.jaxcompat import make_mesh
+from repro.fv3.dyncore import FV3Config, make_step_sequential, make_step_distributed
+from repro.fv3.state import ensemble_state, blocks_from_global, global_from_blocks
+cfg = FV3Config(npx=12, nk=2, halo=6, layout=(1, 1), n_split=1, k_split=1,
+                n_tracers=1)
+M, D = 4, 2
+ens0 = ensemble_state(cfg, M)
+mesh = make_mesh((D, 6, 1, 1), ("member", "tile", "y", "x"))
+blocks = {}
+for m in range(M):
+    bm = blocks_from_global({k: v[m] for k, v in ens0.items()}, cfg)
+    for k, v in bm.items():
+        blocks.setdefault(k, []).append(np.asarray(v))
+blocks = {k: jax.numpy.asarray(np.stack(v)) for k, v in blocks.items()}
+step = make_step_distributed(cfg, mesh, member_axis="member", n_members=M,
+                             batch="vmap:1")
+assert step.members_per_group == 2
+out_b = step(blocks)
+step_s = make_step_sequential(cfg)
+h, N = cfg.halo, cfg.npx
+I = np.s_[:, :, h:h+N, h:h+N]
+for m in range(M):
+    ref = step_s({k: v[m] for k, v in ens0.items()})
+    got = global_from_blocks({k: np.asarray(v[m]) for k, v in out_b.items()}, cfg)
+    for k in got:
+        err = np.abs(np.asarray(ref[k])[I] - got[k][I]).max()
+        assert err < 1e-5, (m, k, err)
+print("CHUNK_SHARD_OK")
+"""
+    env = {**os.environ,
+           "PYTHONPATH": str(root / "src"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=12"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "CHUNK_SHARD_OK" in r.stdout
+
+
+def test_distributed_member_batch_validation():
+    """Misconfigured sharded-ensemble requests fail before any compile:
+    ``n_members`` without a member mesh axis, and M not a multiple of the
+    member-axis extent."""
+    import types
+
+    cfg = _step_cfg()
+    with pytest.raises(ValueError, match="member_axis"):
+        make_step_distributed(cfg, None, n_members=4)
+    fake_mesh = types.SimpleNamespace(shape={"member": 3})
+    with pytest.raises(ValueError, match="multiple"):
+        make_step_distributed(cfg, fake_mesh, member_axis="member",
+                              n_members=4)
+
+
 def test_ensemble_state_layout():
     cfg = _step_cfg()
     M = 3
@@ -248,6 +486,67 @@ def test_model_cost_amortizes_launch_overhead():
     # data scales with M, the per-call launch overhead does not: strictly
     # cheaper than eight independent launches, strictly more than one member
     assert c1 < c8 < 8 * c1
+
+
+def test_model_cost_prices_member_chunk():
+    """Chunk pricing: C-wide chunks walk ceil(M/C) sequential steps instead
+    of M (cheaper launch pipeline), but the VMEM feasibility check scales by
+    C — an infeasibly wide chunk prices to infinity."""
+    from repro.core.hardware import get_hardware
+    from repro.core.stencil.schedule import vmem_footprint
+
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    st = _fvt_program(dom).all_nodes()[0].stencil
+    sched = Schedule(block_k=1, k_as_grid=True)
+    M = 8
+    c_grid = model_cost(st, sched, dom, n_members=M)
+    c_c4 = model_cost(st, sched, dom, n_members=M, member_chunk=4)
+    assert c_c4 < c_grid  # 2 chunk steps vs 8 member steps
+    # member_chunk=0 is exactly the pre-chunk model
+    assert model_cost(st, sched, dom, n_members=M, member_chunk=0) == c_grid
+    # footprint scales linearly with C ...
+    f1 = vmem_footprint(st, sched, (dom.nk, dom.nj, dom.ni))
+    f4 = vmem_footprint(st, sched, (dom.nk, dom.nj, dom.ni), member_chunk=4)
+    assert f4 == 4 * f1
+    # ... and a chunk wider than VMEM is infeasible (M large enough that
+    # the chunk is genuine — the model clamps C to M like chunk_for does)
+    hw = get_hardware("p100")  # 48 KiB shared memory
+    too_wide = 2 * (hw.vmem_bytes // f1 + 1)
+    assert model_cost(st, sched, dom, hw, n_members=2 * too_wide,
+                      member_chunk=too_wide) == float("inf")
+
+
+def test_tuning_cache_keys_carry_member_chunk(tmp_path):
+    from repro.core.backend.cache import TuningCache
+
+    cache = TuningCache(tmp_path / "c.json")
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    st = _fvt_program(dom).all_nodes()[0].stencil
+    r0 = tune_stencil(st, dom, backend="pallas-tpu", n_members=8,
+                      cache=cache)
+    assert not r0[0].from_cache
+    r4 = tune_stencil(st, dom, backend="pallas-tpu", n_members=8,
+                      member_chunk=4, cache=cache)
+    assert not r4[0].from_cache  # chunk is part of the key
+    r4b = tune_stencil(st, dom, backend="pallas-tpu", n_members=8,
+                       member_chunk=4, cache=cache)
+    assert r4b[0].from_cache
+
+
+def test_tune_member_chunk_cached(tmp_path):
+    from repro.core import tune_member_chunk
+    from repro.core.backend.cache import TuningCache
+
+    cache = TuningCache(tmp_path / "c.json")
+    dom = DomainSpec(ni=8, nj=8, nk=4, halo=6)
+    st = _fvt_program(dom).all_nodes()[0].stencil
+    c = tune_member_chunk(st, dom, backend="pallas-tpu", n_members=8,
+                          cache=cache)
+    assert 1 <= c <= 8
+    puts = cache.stats.puts
+    c2 = tune_member_chunk(st, dom, backend="pallas-tpu", n_members=8,
+                           cache=cache)
+    assert c2 == c and cache.stats.puts == puts  # served from cache
 
 
 def test_tuning_cache_keys_carry_n_members(tmp_path):
