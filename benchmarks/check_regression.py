@@ -55,6 +55,11 @@ def extract_metrics(bench: dict) -> dict[str, int]:
         tag = f"opt_ladder.opt{lv['opt_level']}"
         out[f"{tag}.kernels"] = lv["kernels"]
         out[f"{tag}.transient_hbm_inputs"] = lv["transient_hbm_inputs"]
+        # static-verifier violations are a pure function of the code and
+        # must be exactly 0 on a green build (the between-pass verifier
+        # would have raised otherwise) — gate keeps the metric pinned
+        if "verify" in lv:
+            out[f"{tag}.verify_violations"] = lv["verify"]["violations"]
     for e in bench.get("nk_sweep", {}).get("entries", []):
         out[f"nk_sweep.nk{e['nk']}.ir_nodes"] = e["ir_nodes"]
         out[f"nk_sweep.nk{e['nk']}.kernels"] = e["kernels"]

@@ -116,7 +116,10 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
     lvls = sorted(OPT_LADDERS)
     fns = {}
     for lvl in lvls:
-        fn = compile_program(p, "jnp", opt_level=lvl)
+        # verify="full": the static verifier runs on the input program and
+        # after every pass — its wall time and violation count (always 0 on
+        # a green build; check_regression gates on it) land in the JSON
+        fn = compile_program(p, "jnp", opt_level=lvl, verify="full")
         jax.block_until_ready(fn(dict(fields), params))  # compile + warm
         fns[lvl] = fn
     n_groups, per_group = (3, 5) if smoke else (5, 12)
@@ -136,6 +139,21 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
     for lvl in lvls:
         fn = fns[lvl]
         rep = fn.opt_report
+        if rep is not None:
+            verify = {
+                "mode": rep.verify_mode,
+                "violations": rep.total_verify_violations,
+                "input_seconds": rep.input_verify_seconds,
+                "per_pass_seconds": {ps.name: ps.verify_seconds
+                                     for ps in rep.passes},
+                "total_seconds": rep.total_verify_seconds,
+            }
+        else:
+            # opt 0 has no pass pipeline: compile_program verified the
+            # input program directly (it would have raised on violations)
+            verify = {"mode": fn.verify_mode, "violations": 0,
+                      "input_seconds": None, "per_pass_seconds": {},
+                      "total_seconds": None}
         levels.append({
             "opt_level": lvl,
             "passes": list(OPT_LADDERS[lvl]),
@@ -145,6 +163,7 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
             "transient_hbm_inputs": len(fn.transient_inputs),
             "wall_us": float(np.min(ts[lvl])) * 1e6,
             "wall_us_median": min_of_medians(ts[lvl]) * 1e6,
+            "verify": verify,
         })
     payload = {
         "program": p.name,

@@ -78,3 +78,17 @@ from .stencil import (  # noqa: F401
     index_search,
     solver_k_blockable,
 )
+from .analysis import (  # noqa: F401
+    AnalysisError,
+    FusionLegalityError,
+    SourceLocation,
+    VerificationError,
+    Violation,
+    check_halo,
+    check_lints,
+    check_races,
+    check_wellformed,
+    lint_program,
+    resolve_verify_mode,
+    verify_program,
+)

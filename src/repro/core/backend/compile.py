@@ -166,7 +166,8 @@ def compile_program(program: "StencilProgram",
                     donate: bool = False,
                     opt_level: int = 0,
                     n_members: int | None = None,
-                    batch: "str | BatchSpec" = "vmap") -> Callable:
+                    batch: "str | BatchSpec" = "vmap",
+                    verify: str | None = None) -> Callable:
     """Compile a whole :class:`StencilProgram` into one functional callable
     ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
@@ -211,6 +212,15 @@ def compile_program(program: "StencilProgram",
     The batch dimension is a compilation-layer decision, not a
     per-stencil rewrite.
 
+    ``verify`` selects the independent static verifier
+    (:mod:`repro.core.analysis`): ``"off"`` skips it; ``"passes"`` runs it
+    on the optimizer's input program and after every pass (violations raise
+    :class:`~repro.core.errors.VerificationError` attributed to the
+    responsible pass); ``"full"`` additionally verifies the program even
+    when no pass runs (``opt_level=0``).  ``None`` (default) resolves via
+    the ``REPRO_VERIFY`` environment variable, falling back to ``"passes"``
+    under pytest/CI and ``"off"`` elsewhere.
+
     The returned callable exposes introspection attributes:
     ``n_kernels`` (number of compiled runners — invariant under chunking),
     ``opt_report`` (the :class:`~repro.core.passes.PipelineReport`,
@@ -242,6 +252,9 @@ def compile_program(program: "StencilProgram",
     chunk_grid = bool(n_members and eff.chunk and eff.outer == "grid")
     Mp = eff.padded_members(n_members) if (chunk_scan or chunk_grid) else \
         (n_members or 0)
+    from ..analysis.verifier import resolve_verify_mode
+
+    verify_mode = resolve_verify_mode(verify)
     opt_report = None
     if opt_level:
         from ..passes import optimize_program
@@ -249,7 +262,14 @@ def compile_program(program: "StencilProgram",
         program, opt_report = optimize_program(
             program, opt_level=opt_level, backend=be.name, hardware=hw,
             n_members=n_members or 1,
-            member_chunk=eff.chunk if n_members else 0)
+            member_chunk=eff.chunk if n_members else 0,
+            verify=verify_mode)
+    elif verify_mode == "full":
+        # no pass runs at level 0, but "full" still audits the program
+        # actually being lowered
+        from ..analysis import verify_program
+
+        verify_program(program, raise_on_violation=True)
     # under outer="scan" each kernel sees one C-member chunk; under
     # outer="grid" the kernels own the chunk loop over the padded axis
     stencil_members, stencil_batch = n_members, eff
@@ -344,6 +364,7 @@ def compile_program(program: "StencilProgram",
     fn.member_chunk = eff.chunk if (n_members and eff.chunk) else None
     fn.n_chunks = (Mp // eff.chunk) if (chunk_scan or chunk_grid) else None
     fn.opt_report = opt_report
+    fn.verify_mode = verify_mode
     fn.program = program
     fn.input_fields = tuple(inputs)
     fn.transient_inputs = tuple(

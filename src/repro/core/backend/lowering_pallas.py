@@ -335,7 +335,8 @@ def _inline_offset_temps(stencil: Stencil) -> Stencil:
 
     comps = tuple(
         Computation(c.direction, tuple(
-            Assign(s.target, rewrite(s.value), s.interval, s.region)
+            Assign(s.target, rewrite(s.value), s.interval, s.region,
+                   loc=s.loc)
             for s in c.statements))
         for c in stencil.computations)
     return dataclasses.replace(stencil, computations=comps)

@@ -55,7 +55,8 @@ def rename_stencil(st: Stencil, field_map: Mapping[str, str],
 
     comps = tuple(
         Computation(c.direction, tuple(
-            Assign(mapname(s.target), map_expr(s.value), s.interval, s.region)
+            Assign(mapname(s.target), map_expr(s.value), s.interval, s.region,
+                   loc=s.loc)
             for s in c.statements))
         for c in st.computations)
     return Stencil(
@@ -113,10 +114,18 @@ class StencilProgram:
         self.fields: dict[str, FieldDecl] = {}
         self.params: list[str] = []
         self._counter = 0
+        #: set by :meth:`propagate_extents`; the halo-sufficiency analysis
+        #: only audits writer extents once they have been assigned
+        self.extents_propagated = False
+        #: redeclared field names (shadowed declares) — surfaced by the
+        #: ``repro.lint`` shadowed-declare lint
+        self.redeclared: list[str] = []
 
     # -- construction --------------------------------------------------------
     def declare(self, name: str, dtype=jnp.float32, transient: bool = False,
                 interface: bool = False) -> str:
+        if name in self.fields and name not in self.redeclared:
+            self.redeclared.append(name)
         self.fields[name] = FieldDecl(name, dtype, transient, interface)
         return name
 
@@ -160,6 +169,8 @@ class StencilProgram:
         q.fields = {k: dataclasses.replace(v) for k, v in self.fields.items()}
         q.params = list(self.params)
         q._counter = self._counter
+        q.extents_propagated = self.extents_propagated
+        q.redeclared = list(self.redeclared)
         return q
 
     # -- queries ---------------------------------------------------------------
@@ -198,6 +209,7 @@ class StencilProgram:
         extended so every downstream read (at any offset) sees computed data.
         This is the paper's 'buffer sizes ... transparently defined by
         inferring halo regions and extents from usage' (§III-A)."""
+        self.extents_propagated = True
         required: dict[str, tuple[int, int]] = {}
         nodes = [(s, n) for s in self.states for n in s.nodes]
         for state, node in reversed(nodes):
@@ -229,7 +241,8 @@ class StencilProgram:
                 schedule_overrides=None, interpret: bool = True,
                 donate: bool = False, opt_level: int = 0,
                 n_members: int | None = None,
-                batch: str = "vmap") -> Callable:
+                batch: str = "vmap",
+                verify: str | None = None) -> Callable:
         """Compile the whole program into one functional callable
         ``fn(fields: dict, params: dict) -> dict`` (live fields threaded).
 
@@ -249,7 +262,7 @@ class StencilProgram:
                                schedule_overrides=schedule_overrides,
                                interpret=interpret, donate=donate,
                                opt_level=opt_level, n_members=n_members,
-                               batch=batch)
+                               batch=batch, verify=verify)
 
     def __repr__(self):
         lines = [f"program {self.name}: {len(self.all_nodes())} nodes, "

@@ -84,6 +84,11 @@ class PassStats:
     name: str
     rewrites: int
     seconds: float
+    #: wall time of the post-pass verifier run (0 when verification is off)
+    verify_seconds: float = 0.0
+    #: violations the verifier attributed to this pass (always 0 on a
+    #: successful pipeline — violations raise; kept for bench reporting)
+    verify_violations: int = 0
 
 
 @dataclasses.dataclass
@@ -98,6 +103,11 @@ class PipelineReport:
     kernels_after: int = 0
     hbm_bytes_before: int = 0
     hbm_bytes_after: int = 0
+    #: effective verification mode ("off" | "passes" | "full") and the wall
+    #: time spent verifying the *input* program (per-pass times live in
+    #: :class:`PassStats`)
+    verify_mode: str = "off"
+    input_verify_seconds: float = 0.0
 
     @property
     def total_rewrites(self) -> int:
@@ -115,7 +125,19 @@ class PipelineReport:
         for p in self.passes:
             lines.append(f"  {p.name:20s} rewrites={p.rewrites:4d} "
                          f"{p.seconds * 1e3:8.2f} ms")
+        if self.verify_mode != "off":
+            lines.append(f"  verifier ({self.verify_mode}): 0 violations, "
+                         f"{self.total_verify_seconds * 1e3:.2f} ms total")
         return "\n".join(lines)
+
+    @property
+    def total_verify_seconds(self) -> float:
+        return self.input_verify_seconds + \
+            sum(p.verify_seconds for p in self.passes)
+
+    @property
+    def total_verify_violations(self) -> int:
+        return sum(p.verify_violations for p in self.passes)
 
     def as_dict(self) -> dict:
         return {
@@ -126,6 +148,8 @@ class PipelineReport:
             "kernels_after": self.kernels_after,
             "hbm_bytes_before": self.hbm_bytes_before,
             "hbm_bytes_after": self.hbm_bytes_after,
+            "verify_mode": self.verify_mode,
+            "input_verify_seconds": self.input_verify_seconds,
             "passes": [dataclasses.asdict(p) for p in self.passes],
         }
 
@@ -300,29 +324,56 @@ def optimize_program(program: StencilProgram, *, opt_level: int = 3,
                      inplace: bool = False,
                      n_members: int = 1,
                      member_chunk: int = 0,
+                     verify: str = "off",
                      ) -> tuple[StencilProgram, PipelineReport]:
     """Run the opt ladder for ``opt_level`` (or an explicit ``passes`` list)
     over a clone of ``program``; returns ``(optimized, report)``.
 
     The clone preserves the caller's graph: `compile_program` can be invoked
     repeatedly at different opt levels on the same program object.
+
+    ``verify="passes"``/``"full"`` runs the independent static verifier
+    (:mod:`repro.core.analysis`) on the input program and again after every
+    pass.  Because the input must be clean before any pass runs, a
+    violation found after pass P is attributed to P: the raised
+    :class:`~repro.core.errors.VerificationError` carries ``pass_name`` and
+    the structured diagnostics, and per-pass verifier wall time is recorded
+    in the report's :class:`PassStats`.
     """
+    do_verify = verify in ("passes", "full")
+    if do_verify:
+        from .analysis import verify_program
+    elif verify != "off":
+        raise ValueError(f"verify={verify!r} invalid; expected "
+                         "'off', 'passes' or 'full'")
     hw = resolve_hardware(hardware)
     names = ladder_for(opt_level) if passes is None else tuple(passes)
     prog = program if inplace else program.copy()
     report = PipelineReport(
         opt_level=opt_level, backend=backend, hardware=hw.name,
         kernels_before=len(prog.all_nodes()),
-        hbm_bytes_before=program_bytes(prog))
+        hbm_bytes_before=program_bytes(prog), verify_mode=verify)
     ctx = PassContext(backend=backend, hardware=hw, cache=cache,
                       n_members=max(1, n_members),
                       member_chunk=max(0, member_chunk))
+    if do_verify:
+        # input program first: every pass then starts from a verified
+        # graph, which is what makes per-pass attribution sound
+        t0 = time.perf_counter()
+        verify_program(prog, raise_on_violation=True)
+        report.input_verify_seconds = time.perf_counter() - t0
     for name in names:
         fn = get_pass(name)
         t0 = time.perf_counter()
         rewrites = fn(prog, ctx)
-        report.passes.append(
-            PassStats(name, rewrites, time.perf_counter() - t0))
+        stats = PassStats(name, rewrites, time.perf_counter() - t0)
+        if do_verify:
+            t1 = time.perf_counter()
+            stats.verify_violations = len(
+                verify_program(prog, pass_name=name,
+                               raise_on_violation=True))
+            stats.verify_seconds = time.perf_counter() - t1
+        report.passes.append(stats)
     report.kernels_after = len(prog.all_nodes())
     report.hbm_bytes_after = program_bytes(prog)
     return prog, report

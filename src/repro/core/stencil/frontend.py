@@ -31,6 +31,7 @@ import textwrap
 from typing import Any, Callable
 
 from . import ir
+from ..errors import SourceLocation
 from .ir import (
     Assign,
     BinOp,
@@ -110,11 +111,16 @@ class StencilSyntaxError(SyntaxError):
 
 class _Parser(ast.NodeVisitor):
     def __init__(self, name: str, fields: list[str], params: list[str],
-                 consts: dict[str, Any]):
+                 consts: dict[str, Any],
+                 src_file: str | None = None, line_base: int = 0):
         self.name = name
         self.fields = list(fields)
         self.params = list(params)
         self.consts = consts
+        # source-location capture: AST line numbers are relative to the
+        # dedented source snippet; ``line_base`` re-anchors them to the file
+        self.src_file = src_file
+        self.line_base = line_base
         self.temps: list[str] = []
         self.computations: list[Computation] = []
         # current context
@@ -312,7 +318,8 @@ class _Parser(ast.NodeVisitor):
         value = self.expr(node.value)
         if tgt not in self.fields and tgt not in self.temps:
             self.temps.append(tgt)
-        self._stmts.append(Assign(tgt, value, self._interval, self._region))
+        self._stmts.append(Assign(tgt, value, self._interval, self._region,
+                                  loc=self._loc(node)))
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
         if not isinstance(node.target, ast.Name):
@@ -323,7 +330,13 @@ class _Parser(ast.NodeVisitor):
         value = BinOp(op, cur, self.expr(node.value))
         if tgt not in self.fields and tgt not in self.temps:
             raise StencilSyntaxError("augmented assignment to undefined name")
-        self._stmts.append(Assign(tgt, value, self._interval, self._region))
+        self._stmts.append(Assign(tgt, value, self._interval, self._region,
+                                  loc=self._loc(node)))
+
+    def _loc(self, node: ast.stmt) -> SourceLocation | None:
+        if self.src_file is None:
+            return None
+        return SourceLocation(self.src_file, self.line_base + node.lineno)
 
     def visit_Expr(self, node: ast.Expr) -> None:
         if isinstance(node.value, ast.Constant):  # docstring
@@ -355,6 +368,11 @@ def gtstencil(fn: Callable | None = None, *, name: str | None = None):
 
     def build(f: Callable) -> Stencil:
         src = textwrap.dedent(inspect.getsource(f))
+        try:
+            src_file = inspect.getsourcefile(f)
+            line_base = inspect.getsourcelines(f)[1] - 1
+        except (OSError, TypeError):  # pragma: no cover - exotic callables
+            src_file, line_base = None, 0
         tree = ast.parse(src)
         fdef = tree.body[0]
         assert isinstance(fdef, ast.FunctionDef)
@@ -388,7 +406,8 @@ def gtstencil(fn: Callable | None = None, *, name: str | None = None):
             for k, v in scope.items():
                 if isinstance(v, (int, float, bool)):
                     consts[k] = v
-        p = _Parser(name or fdef.name, fields, params, consts)
+        p = _Parser(name or fdef.name, fields, params, consts,
+                    src_file=src_file, line_base=line_base)
         for stmt in fdef.body:
             if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
                 continue  # docstring

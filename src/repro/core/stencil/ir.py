@@ -19,6 +19,8 @@ import enum
 import math
 from typing import Any, Callable, Mapping, Sequence
 
+from ..errors import FusionLegalityError, SourceLocation
+
 Offset = tuple[int, int, int]
 
 # ---------------------------------------------------------------------------
@@ -265,7 +267,7 @@ class FoundLevel(Expr):
 
     def substitute(self, name, fn):
         if self.name == name:
-            raise ValueError(
+            raise FusionLegalityError(
                 f"cannot substitute field {name!r} read through a level "
                 "search; inline fusion across a LevelSearch is illegal")
         return self
@@ -333,7 +335,7 @@ class LevelSearch(Expr):
 
     def substitute(self, name, fn):
         if name == self.coord:
-            raise ValueError(
+            raise FusionLegalityError(
                 f"cannot substitute search coordinate {name!r}; inline "
                 "fusion across a LevelSearch is illegal")
         return self.map_children(lambda c: c.substitute(name, fn))
@@ -573,6 +575,11 @@ class Assign:
     value: Expr
     interval: Interval = dataclasses.field(default_factory=Interval)
     region: Region | None = None
+    #: source location of the user statement (frontend-captured); excluded
+    #: from equality/repr so stencil fingerprints and motif sharing are
+    #: unaffected by where a stencil was defined
+    loc: SourceLocation | None = dataclasses.field(
+        default=None, compare=False)
 
     def __repr__(self):
         r = f" @{self.region}" if self.region else ""

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
+from .errors import FusionLegalityError
 from .graph import Node, State, StencilProgram
 from .stencil.ir import (
     Assign,
@@ -65,7 +66,8 @@ def _reduce_pow(e: Expr) -> Expr:
 def strength_reduce_pow(stencil: Stencil) -> Stencil:
     comps = tuple(
         Computation(c.direction, tuple(
-            Assign(s.target, _reduce_pow(s.value), s.interval, s.region)
+            Assign(s.target, _reduce_pow(s.value), s.interval, s.region,
+                   loc=s.loc)
             for s in c.statements))
         for c in stencil.computations)
     return dataclasses.replace(stencil, computations=comps)
@@ -160,8 +162,13 @@ def otf_fuse(program: StencilProgram, state: State, producer: Node,
     def subst_stmt(stmt: Assign) -> Assign:
         v = stmt.value
         for f, rhs in defs.items():
-            v = v.substitute(f, lambda off, rhs=rhs: rhs.shift(off))
-        return Assign(stmt.target, v, stmt.interval, stmt.region)
+            try:
+                v = v.substitute(f, lambda off, rhs=rhs: rhs.shift(off))
+            except FusionLegalityError as e:
+                raise e.with_context(stencil=consumer.stencil.name,
+                                     statement=repr(stmt), loc=stmt.loc)
+        return Assign(stmt.target, v, stmt.interval, stmt.region,
+                      loc=stmt.loc)
 
     new_comps = tuple(
         Computation(c.direction, tuple(subst_stmt(s) for s in c.statements))

@@ -342,17 +342,21 @@ def _build_programs(cfg: FV3Config, dom: DomainSpec):
 
 def _make_programs(cfg: FV3Config, dom: DomainSpec, backend: str,
                    opt_level: int, hardware=None,
-                   n_members: int | None = None, batch: str = "vmap"):
+                   n_members: int | None = None, batch: str = "vmap",
+                   verify: str | None = None):
     """Build the four stencil programs (acoustic c_sw / d_sw, tracer
     transport, vertical remap) and compile each through the automatic
     optimization ladder (the paper's opt pipeline applies to the whole
     dycore — remap included — with no per-program hand-tuning).
-    ``n_members``/``batch`` thread the ensemble axis into every program."""
+    ``n_members``/``batch`` thread the ensemble axis into every program;
+    ``verify`` selects the static-verifier mode (``None`` resolves from
+    ``$REPRO_VERIFY`` / the pytest-CI default, see
+    :func:`repro.core.analysis.resolve_verify_mode`)."""
     progs = _build_programs(cfg, dom)
     runners = tuple(
         compile_program(p, backend, hardware=hardware, interpret=True,
                         opt_level=opt_level, n_members=n_members,
-                        batch=batch)
+                        batch=batch, verify=verify)
         for p in progs)
     return progs, runners
 

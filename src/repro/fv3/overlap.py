@@ -62,13 +62,15 @@ def _strip_program(program: StencilProgram, dom: DomainSpec,
     q.fields = {k: dataclasses.replace(v) for k, v in program.fields.items()}
     q.params = list(program.params)
     q.states = copy.deepcopy(program.states)
+    q.extents_propagated = program.extents_propagated
     ni_g, nj_g = program.dom.ni, program.dom.nj
     for n in q.all_nodes():
         comps = tuple(
             Computation(c.direction, tuple(
                 Assign(s.target, s.value, s.interval,
                        None if s.region is None else
-                       _translate_region(s.region, ni_g, nj_g, oi, oj))
+                       _translate_region(s.region, ni_g, nj_g, oi, oj),
+                       loc=s.loc)
                 for s in c.statements))
             for c in n.stencil.computations)
         n.stencil = dataclasses.replace(n.stencil, computations=comps)
@@ -90,7 +92,8 @@ def written_fields(program: StencilProgram) -> tuple[str, ...]:
 def make_overlapped_runner(program: StencilProgram, *,
                            backend: str = "jnp", hardware=None,
                            interpret: bool = True,
-                           opt_level: int = 0) -> Callable | None:
+                           opt_level: int = 0,
+                           verify: str | None = None) -> Callable | None:
     """Compile ``program`` into ``fn(stale, fresh, params) -> outputs``.
 
     ``stale`` are the pre-exchange arrays (interior compute, overlappable
@@ -105,7 +108,8 @@ def make_overlapped_runner(program: StencilProgram, *,
         return None
 
     full_run = compile_program(program, backend, hardware=hardware,
-                               interpret=interpret, opt_level=opt_level)
+                               interpret=interpret, opt_level=opt_level,
+                               verify=verify)
     outputs = written_fields(program)
 
     # (tag, strip dom, interior origin (oi, oj), input slab, src, dst):
@@ -140,7 +144,8 @@ def make_overlapped_runner(program: StencilProgram, *,
     for tag, sdom, (oi, oj), slab, src, dst in specs:
         sp = _strip_program(program, sdom, oi, oj, tag)
         run = compile_program(sp, backend, hardware=hardware,
-                              interpret=interpret, opt_level=strip_level)
+                              interpret=interpret, opt_level=strip_level,
+                              verify=verify)
         strips.append((run, slab, src, dst))
 
     def runner(stale: Mapping, fresh: Mapping,
