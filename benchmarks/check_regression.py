@@ -60,6 +60,11 @@ def extract_metrics(bench: dict) -> dict[str, int]:
         # would have raised otherwise) — gate keeps the metric pinned
         if "verify" in lv:
             out[f"{tag}.verify_violations"] = lv["verify"]["violations"]
+        # a required pattern rewrite (e.g. cross_cse/stencil_combine at
+        # level 4) that stops firing is a silent optimizer regression even
+        # when the kernel count holds — gate keeps the miss count at 0
+        if "required_rule_misses" in lv:
+            out[f"{tag}.required_rule_misses"] = lv["required_rule_misses"]
     for e in bench.get("nk_sweep", {}).get("entries", []):
         out[f"nk_sweep.nk{e['nk']}.ir_nodes"] = e["ir_nodes"]
         out[f"nk_sweep.nk{e['nk']}.kernels"] = e["kernels"]

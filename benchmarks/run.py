@@ -103,6 +103,11 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
     from repro.fv3.dyncore import (FV3Config, build_csw_program,
                                    default_params)
 
+    # pattern rewrites that must fire on the C-grid program at their level —
+    # a 0 count means the rule regressed to a no-op (gated by
+    # check_regression via required_rule_misses == 0)
+    required_rules = {4: ("stencil_combine", "cross_cse")}
+
     npx, nk = (16, 4) if smoke else (32, 8)
     cfg = FV3Config(npx=npx, nk=nk, halo=6)
     dom = cfg.seq_dom()
@@ -154,6 +159,7 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
             verify = {"mode": fn.verify_mode, "violations": 0,
                       "input_seconds": None, "per_pass_seconds": {},
                       "total_seconds": None}
+        rules = dict(rep.rules) if rep is not None else {}
         levels.append({
             "opt_level": lvl,
             "passes": list(OPT_LADDERS[lvl]),
@@ -161,6 +167,9 @@ def opt_ladder_json(path: str = "BENCH_opt_ladder.json",
             "hbm_bytes_model": (rep.hbm_bytes_after if rep is not None
                                 else program_bytes(p)),
             "transient_hbm_inputs": len(fn.transient_inputs),
+            "rule_rewrites": rules,
+            "required_rule_misses": sum(
+                1 for r in required_rules.get(lvl, ()) if not rules.get(r)),
             "wall_us": float(np.min(ts[lvl])) * 1e6,
             "wall_us_median": min_of_medians(ts[lvl]) * 1e6,
             "verify": verify,

@@ -79,7 +79,12 @@ def run() -> list[str]:
             if run_fn.opt_report is not None:
                 rewrites += run_fn.opt_report.total_rewrites
             wall += wall_clock(run_fn, fields, params)
-        name = "+".join(OPT_LADDERS[lvl][-1:]) or "default"
+        # label each rung by what it adds over the previous level (level 4
+        # inserts its pattern rewrites mid-ladder, so "last pass" would
+        # name levels 3 and 4 identically)
+        prev = OPT_LADDERS.get(lvl - 1, ())
+        name = "+".join(n for n in OPT_LADDERS[lvl] if n not in prev) \
+            or "default"
         ladder.append((f"opt{lvl}_{name}", model, wall, kernels, rewrites))
 
     base_model, base_wall = ladder[0][1], ladder[0][2]

@@ -27,14 +27,27 @@ from .backend import (  # noqa: F401
     register_backend,
     set_default_cache,
 )
-from .passes import (  # noqa: F401
+from .rewrite import (  # noqa: F401
     OPT_LADDERS,
+    FunctionRule,
+    Match,
     PassContext,
     PassStats,
+    Pipeline,
     PipelineReport,
+    RewriteRule,
+    RewriteTraceEntry,
+    Stage,
+    available_rules,
+    get_rule,
+    optimize_program,
+    pipeline_for_level,
+    register_rule,
+    run_fixpoint,
+)
+from .passes import (  # noqa: F401  (deprecated string-based pass surface)
     available_passes,
     get_pass,
-    optimize_program,
     register_pass,
 )
 from .orchestration import Monitor, bind_constants, orchestrate  # noqa: F401

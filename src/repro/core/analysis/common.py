@@ -152,37 +152,40 @@ def expandable_temps(st: Stencil) -> set[str]:
             if c.direction is not Direction.PARALLEL:
                 seq_defined.add(s.target)
     full = Interval()
-    out: set[str] = set()
-    for t, s in defs.items():
-        if (n_defs[t] != 1 or s.region is not None or s.interval != full
-                or t in seq_defined):
-            continue
-        ok = True
-        frontier = [s.value]
-        seen_t = {t}
-        while frontier and ok:
-            reads = list(expr_reads(frontier.pop()))
-            for r in reads:
-                if r.search is not None or r.absolute_k:
-                    ok = False
+    memo: dict[str, bool] = {}
+
+    def ok(t: str, stack: frozenset) -> bool:
+        # DAG-aware: a temp read twice along different operands (the shape
+        # cross-computation CSE creates) is fine; only a def that reaches
+        # *itself* is a genuine cycle.  With single defs, reaching any
+        # ancestor of the current path implies membership in that cycle, so
+        # memoizing the False is sound for every entry path.
+        if t in memo:
+            return memo[t]
+        if t in stack:
+            memo[t] = False
+            return False
+        s = defs.get(t)
+        if (s is None or n_defs[t] != 1 or s.region is not None
+                or s.interval != full or t in seq_defined):
+            memo[t] = False
+            return False
+        good = True
+        for r in expr_reads(s.value):
+            if r.search is not None or r.absolute_k:
+                good = False
+                break
+            if r.name in temps:
+                if not ok(r.name, stack | {t}):
+                    good = False
                     break
-                if r.name in temps:
-                    if r.name in seen_t or r.name not in defs:
-                        ok = False
-                        break
-                    d = defs[r.name]
-                    if (n_defs[r.name] != 1 or d.region is not None
-                            or d.interval != full or r.name in seq_defined):
-                        ok = False
-                        break
-                    seen_t.add(r.name)
-                    frontier.append(d.value)
-                elif r.name in written_fields:
-                    ok = False
-                    break
-        if ok:
-            out.add(t)
-    return out
+            elif r.name in written_fields:
+                good = False
+                break
+        memo[t] = good
+        return good
+
+    return {t for t in defs if ok(t, frozenset())}
 
 
 def stencil_field_reach(st: Stencil) -> dict[str, tuple[int, int]]:

@@ -7,15 +7,21 @@ step, maximum launch-pipeline overhead).  The benchmarks show both extremes
 lose at large M; the fix is the same one Devito/DaCe apply to any other loop
 dimension: *tile it*.  A :class:`BatchSpec` describes the tiling —
 
-    inner  how the members inside one chunk batch together
+    mode   how the members inside one chunk batch together
            ("vmap" → :func:`jax.vmap`; "grid" → the backend's member grid
            axis, Pallas only)
     chunk  C, members per chunk (0 → unchunked, C = M; AUTO → cost-model
            pick via :func:`repro.core.autotune.tune_member_chunk`)
-    outer  how chunks are sequenced ("scan" → a program-level
+    loop   how chunks are sequenced ("scan" → a program-level
            :func:`jax.lax.scan` over ceil(M/C) chunks; "grid" → the chunk
            loop becomes the outermost *sequential* Pallas grid axis with
            C-member blocks — backends without a grid fall back to "scan")
+
+Construct directly — ``BatchSpec(mode="vmap", chunk=4, loop="scan")`` —
+or parse a spec string via :meth:`BatchSpec.parse` / :func:`parse_batch`.
+(The pre-redesign field names ``inner``/``outer`` are still accepted as
+constructor keywords with a :class:`DeprecationWarning` and readable as
+properties.)
 
 Accepted spellings (:func:`parse_batch`):
 
@@ -37,6 +43,7 @@ members never interact.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Mapping
 
 import jax
@@ -45,44 +52,78 @@ import jax.numpy as jnp
 #: sentinel chunk value — resolve through the cost model at compile time
 AUTO = -1
 
-_INNER = ("vmap", "grid")
-_OUTER = ("scan", "grid")
+_MODES = ("vmap", "grid")
+_LOOPS = ("scan", "grid")
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class BatchSpec:
-    """Parsed member-batching strategy (see module docstring)."""
+    """Typed member-batching strategy (see module docstring)."""
 
-    inner: str = "vmap"
+    mode: str = "vmap"
     chunk: int = 0
-    outer: str = "scan"
+    loop: str = "scan"
 
-    def __post_init__(self):
-        if self.inner not in _INNER:
+    def __init__(self, mode: str | None = None, chunk: int = 0,
+                 loop: str | None = None, *,
+                 inner: str | None = None, outer: str | None = None):
+        if inner is not None:
+            warnings.warn("BatchSpec(inner=...) is deprecated; use mode=",
+                          DeprecationWarning, stacklevel=2)
+            if mode is None:
+                mode = inner
+        if outer is not None:
+            warnings.warn("BatchSpec(outer=...) is deprecated; use loop=",
+                          DeprecationWarning, stacklevel=2)
+            if loop is None:
+                loop = outer
+        mode = "vmap" if mode is None else mode
+        loop = "scan" if loop is None else loop
+        if mode not in _MODES:
             raise ValueError(
-                f"batch inner mode must be one of {_INNER}, got {self.inner!r}")
-        if self.outer not in _OUTER:
+                f"batch mode must be one of {_MODES}, got {mode!r}")
+        if loop not in _LOOPS:
             raise ValueError(
-                f"batch outer mode must be one of {_OUTER}, got {self.outer!r}")
-        if self.chunk != AUTO and self.chunk < 0:
+                f"batch loop mode must be one of {_LOOPS}, got {loop!r}")
+        if chunk != AUTO and chunk < 0:
             raise ValueError(
-                f"batch chunk size must be positive, got {self.chunk}")
-        if self.inner == "grid" and self.chunk and self.outer == "grid":
+                f"batch chunk size must be positive, got {chunk}")
+        if mode == "grid" and chunk and loop == "grid":
             raise ValueError(
                 "batch spec 'grid:C,grid' is redundant — the member grid "
                 "axis already walks members sequentially; use 'grid' or "
                 "'vmap:C,grid'")
+        object.__setattr__(self, "mode", mode)
+        object.__setattr__(self, "chunk", chunk)
+        object.__setattr__(self, "loop", loop)
+
+    # -- legacy field spellings ----------------------------------------------
+    @property
+    def inner(self) -> str:
+        """Pre-redesign name of :attr:`mode` (kept readable, no warning)."""
+        return self.mode
+
+    @property
+    def outer(self) -> str:
+        """Pre-redesign name of :attr:`loop` (kept readable, no warning)."""
+        return self.loop
+
+    @classmethod
+    def parse(cls, batch: "str | BatchSpec") -> "BatchSpec":
+        """Parse a spec string (``"vmap"``, ``"vmap:4,grid"`` …) — the
+        grammar every string-taking ``batch=`` argument accepts."""
+        return parse_batch(batch)
 
     # -- derived quantities --------------------------------------------------
     @property
     def token(self) -> str:
         """Canonical spelling — the memo/tuning-cache key component."""
         if not self.chunk:
-            return self.inner
+            return self.mode
         c = "auto" if self.chunk == AUTO else str(self.chunk)
-        if self.outer == "grid":
-            return f"{self.inner}:{c},grid"
-        return f"{self.inner}:{c}"
+        if self.loop == "grid":
+            return f"{self.mode}:{c},grid"
+        return f"{self.mode}:{c}"
 
     def chunk_for(self, n_members: int) -> int:
         """Effective C for an M-member ensemble (clamped; 0 → M)."""
@@ -116,16 +157,16 @@ def parse_batch(batch: "str | BatchSpec") -> BatchSpec:
     if len(parts) > 2 or any(not p for p in parts):
         raise ValueError(
             f"malformed batch spec {batch!r}: expected "
-            "'vmap'|'grid'|'<inner>:<C>[,scan|grid]'")
+            "'vmap'|'grid'|'<mode>:<C>[,scan|grid]'")
     head = parts[0].split(":")
     if len(head) > 2 or any(not p for p in head):
         raise ValueError(
             f"malformed batch spec {batch!r}: chunk goes after a single "
             "':' as in 'vmap:4' or 'vmap:auto'")
-    inner = head[0]
-    if inner not in _INNER:
+    mode = head[0]
+    if mode not in _MODES:
         raise ValueError(
-            f"batch inner mode must be 'vmap' or 'grid', got {inner!r} "
+            f"batch mode must be 'vmap' or 'grid', got {mode!r} "
             f"(in {batch!r})")
     chunk = 0
     if len(head) == 2:
@@ -142,18 +183,18 @@ def parse_batch(batch: "str | BatchSpec") -> BatchSpec:
                 raise ValueError(
                     f"batch chunk size must be positive, got {chunk} "
                     f"(in {batch!r})")
-    outer = "scan"
+    loop = "scan"
     if len(parts) == 2:
         if not chunk:
             raise ValueError(
-                f"batch outer mode {parts[1]!r} requires a chunk size "
+                f"batch loop mode {parts[1]!r} requires a chunk size "
                 f"('vmap:C,{parts[1]}'), got {batch!r}")
-        outer = parts[1]
-        if outer not in _OUTER:
+        loop = parts[1]
+        if loop not in _LOOPS:
             raise ValueError(
-                f"batch outer mode must be 'scan' or 'grid', got {outer!r} "
+                f"batch loop mode must be 'scan' or 'grid', got {loop!r} "
                 f"(in {batch!r})")
-    return BatchSpec(inner=inner, chunk=chunk, outer=outer)
+    return BatchSpec(mode=mode, chunk=chunk, loop=loop)
 
 
 # ---------------------------------------------------------------------------

@@ -43,8 +43,11 @@ _CACHE_VERSION = 1
 #: per-launch overhead across the member grid dimension; tuning keys carry
 #: n_members.  v7: hybrid member chunking — model_cost/vmem_footprint take
 #: member_chunk, launch terms count ceil(M/C) chunk steps instead of M,
-#: feasibility prices C-member blocks, and tuning keys carry the chunk.)
-COST_MODEL_VERSION = 7
+#: feasibility prices C-member blocks, and tuning keys carry the chunk.
+#: v8: rewrite engine — opt_level 4 rewrites (stencil-combine, cross-
+#: computation CSE) reshape stencil bodies before tuning, so fingerprints
+#: of tuned stencils and the footprints the model prices both change.)
+COST_MODEL_VERSION = 8
 
 
 def stencil_fingerprint(stencil: Stencil) -> str:

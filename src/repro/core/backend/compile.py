@@ -178,9 +178,10 @@ def compile_program(program: "StencilProgram",
     names (``"al_x"``) to :class:`Schedule` objects, overriding any
     schedule stored on the node.
 
-    ``opt_level`` (0–3) selects the automatic optimization ladder
-    (:mod:`repro.core.passes`) applied to a *clone* of ``program`` —
-    the caller's graph is never mutated.  ``donate=True`` donates the
+    ``opt_level`` (0–4) selects the automatic optimization pipeline
+    (:mod:`repro.core.rewrite`; level 4 adds the pattern stencil rewrites)
+    applied to a *clone* of ``program`` — the caller's graph is never
+    mutated.  ``donate=True`` donates the
     input fields dict to the jitted step, but only on platforms where XLA
     honors donation (TPU/GPU); on CPU the flag degrades to a plain ``jit``
     instead of triggering per-call XLA warnings (see
@@ -243,13 +244,13 @@ def compile_program(program: "StencilProgram",
     eff = spec
     if n_members and eff.chunk:
         C = eff.chunk_for(n_members)
-        outer = eff.outer if be.member_grid else "scan"
-        if outer == "scan" and C >= n_members:
-            eff = BatchSpec(inner=eff.inner)
+        loop = eff.loop if be.member_grid else "scan"
+        if loop == "scan" and C >= n_members:
+            eff = BatchSpec(mode=eff.mode)
         else:
-            eff = BatchSpec(inner=eff.inner, chunk=C, outer=outer)
-    chunk_scan = bool(n_members and eff.chunk and eff.outer == "scan")
-    chunk_grid = bool(n_members and eff.chunk and eff.outer == "grid")
+            eff = BatchSpec(mode=eff.mode, chunk=C, loop=loop)
+    chunk_scan = bool(n_members and eff.chunk and eff.loop == "scan")
+    chunk_grid = bool(n_members and eff.chunk and eff.loop == "grid")
     Mp = eff.padded_members(n_members) if (chunk_scan or chunk_grid) else \
         (n_members or 0)
     from ..analysis.verifier import resolve_verify_mode
@@ -270,11 +271,11 @@ def compile_program(program: "StencilProgram",
         from ..analysis import verify_program
 
         verify_program(program, raise_on_violation=True)
-    # under outer="scan" each kernel sees one C-member chunk; under
-    # outer="grid" the kernels own the chunk loop over the padded axis
+    # under loop="scan" each kernel sees one C-member chunk; under
+    # loop="grid" the kernels own the chunk loop over the padded axis
     stencil_members, stencil_batch = n_members, eff
     if chunk_scan:
-        stencil_members, stencil_batch = eff.chunk, BatchSpec(inner=eff.inner)
+        stencil_members, stencil_batch = eff.chunk, BatchSpec(mode=eff.mode)
     elif chunk_grid:
         stencil_members = Mp
     runners = []

@@ -56,20 +56,20 @@ class PallasTPUBackend(Backend):
         if spec.chunk:
             C = spec.chunk_for(n_members)
             padded = spec.padded_members(n_members)
-            if spec.outer == "grid":
+            if spec.loop == "grid":
                 # hybrid: chunk loop on the outermost sequential grid axis,
                 # C-member blocks inside each kernel
                 fn = lower(members=padded, chunk=C)
                 return fn if padded == n_members else \
                     pad_wrapped(fn, n_members, padded)
             if C >= n_members:
-                spec = BatchSpec(inner=spec.inner)  # one chunk: plain inner
+                spec = BatchSpec(mode=spec.mode)  # one chunk: plain mode
             else:
-                # outer="scan": program-of-chunks over the inner lowering
-                inner = (jax.vmap(lower(), in_axes=(0, None))
-                         if spec.inner == "vmap" else lower(members=C))
-                return scan_chunked(inner, n_members, C)
-        if spec.inner == "vmap":
+                # loop="scan": program-of-chunks over the chunk-mode lowering
+                chunk_fn = (jax.vmap(lower(), in_axes=(0, None))
+                            if spec.mode == "vmap" else lower(members=C))
+                return scan_chunked(chunk_fn, n_members, C)
+        if spec.mode == "vmap":
             # A/B baseline against the member grid axis: the single-member
             # kernel under jax.vmap (pallas_call's batching rule prepends
             # its own grid dimension)

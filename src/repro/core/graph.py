@@ -204,13 +204,20 @@ class StencilProgram:
         return True
 
     # -- extent inference (GT4Py's transparent halo/extent analysis) ----------
-    def propagate_extents(self) -> None:
+    def propagate_extents(
+            self, seed: Mapping[str, tuple[int, int]] | None = None) -> None:
         """Walk nodes in reverse program order; each node's compute domain is
         extended so every downstream read (at any offset) sees computed data.
         This is the paper's 'buffer sizes ... transparently defined by
-        inferring halo regions and extents from usage' (§III-A)."""
+        inferring halo regions and extents from usage' (§III-A).
+
+        ``seed`` pre-loads external extent requirements on program outputs —
+        fields a *later program* will read at an offset without an
+        intervening halo exchange.  The recompute-vs-exchange rewrite uses it
+        to widen a producer's compute rim in place of the exchange.
+        """
         self.extents_propagated = True
-        required: dict[str, tuple[int, int]] = {}
+        required: dict[str, tuple[int, int]] = dict(seed or {})
         nodes = [(s, n) for s in self.states for n in s.nodes]
         for state, node in reversed(nodes):
             ei, ej = 0, 0

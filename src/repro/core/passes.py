@@ -1,379 +1,74 @@
-"""Automatic full-program optimization — the pass manager (paper §V–VI).
+"""Legacy pass-manager surface — compatibility shim over
+:mod:`repro.core.rewrite` (paper §V–VI).
 
-The paper's headline speedups come from applying the same optimization
-*ladder* to the whole dataflow graph without user intervention: prune the
-removable containers, strength-reduce the expensive operators, fuse the
-repeating stencil motifs, then assign transfer-tuned schedules.  This module
-packages those steps as registered passes selected by an ``opt_level``
-(Devito's pass-manager idiom on DaCe-style graph rewrites):
+The pass manager was redesigned into a pattern-based rewrite engine: rules
+(:class:`~repro.core.rewrite.RewriteRule`) in a typed registry, composed
+into typed :class:`~repro.core.rewrite.Pipeline` objects, driven by
+:func:`~repro.core.rewrite.optimize_program` — see the package docstring
+of :mod:`repro.core.rewrite` and the README's "Rewrite rules & opt_level
+4" section for the new API and a migration note.
 
- * ``opt_level=0`` — no transformation (the debuggable 1:1 lowering);
- * ``opt_level=1`` — ``prune_transients`` + ``strength_reduce``;
- * ``opt_level=2`` — plus ``greedy_fuse``: cost-model-guided OTF
-   producer/consumer inlining and subgraph fusion of connected runs,
-   each rewrite accepted only when the analytical model under the active
-   :class:`~repro.core.hardware.Hardware` predicts a win *and* the fused
-   kernel's working set still fits fast memory;
- * ``opt_level=3`` — plus ``tune_schedules``: per-motif schedule assignment
-   through :func:`~repro.core.autotune.tune_stencil`, memoized in the
-   persistent tuning cache (one search per machine, not per process).
+This module keeps the pre-redesign string-based surface working for one
+release:
 
-Every pass is a pure graph rewrite ``fn(program, ctx) -> n_rewrites``;
-:func:`optimize_program` clones the input program (callers' graphs are never
-mutated) and returns the optimized clone plus a :class:`PipelineReport` with
-per-pass timing, rewrite counts, and the modeled kernel/HBM-traffic deltas.
+ * ``register_pass(name, fn)`` wraps ``fn(program, ctx) -> n_rewrites``
+   into a :class:`~repro.core.rewrite.FunctionRule` and registers it (with
+   a :class:`DeprecationWarning`; use ``register_rule`` instead);
+ * ``get_pass``/``available_passes`` read the rule registry;
+ * ``OPT_LADDERS``, ``ladder_for``, ``optimize_program``, ``PassContext``,
+   ``PassStats`` and ``PipelineReport`` are straight re-exports — they are
+   the same objects the new package defines.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable
+import warnings
 
-from .graph import Node, State, StencilProgram
-from .hardware import Hardware, resolve_hardware
-from .perfmodel import program_bytes
-from .stencil.schedule import heuristic_schedule, vmem_footprint
-from .transfer_tuning import otf_candidates, sgf_candidates, state_cost
-from .transforms import (
-    can_subgraph_fuse,
-    otf_fuse,
-    prune_transients,
-    strength_reduce_program,
-    subgraph_fuse,
+from .rewrite import (  # noqa: F401  (re-exported compatibility surface)
+    MAX_OPT_LEVEL,
+    OPT_LADDERS,
+    FunctionRule,
+    PassContext,
+    PassStats,
+    Pipeline,
+    PipelineReport,
+    available_rules,
+    get_rule,
+    ladder_for,
+    optimize_program,
+    register_rule,
 )
-
-PassFn = Callable[[StencilProgram, "PassContext"], int]
-
-_PASSES: dict[str, PassFn] = {}
-
-#: ladder per opt level; each level extends the previous (paper Table III's
-#: cumulative rungs)
-OPT_LADDERS: dict[int, tuple[str, ...]] = {
-    0: (),
-    1: ("prune_transients", "strength_reduce"),
-    2: ("prune_transients", "strength_reduce", "greedy_fuse"),
-    3: ("prune_transients", "strength_reduce", "greedy_fuse",
-        "tune_schedules"),
-}
-
-MAX_OPT_LEVEL = max(OPT_LADDERS)
-
-
-@dataclasses.dataclass
-class PassContext:
-    """Everything a pass may consult: the compilation target, the ensemble
-    width the program will be batched over (launch-overhead amortization in
-    the schedule tuner's cost model) and the persistent tuning cache
-    (``None`` → the process default)."""
-
-    backend: str = "jnp"
-    hardware: Hardware | str | None = None
-    cache: object | None = None
-    n_members: int = 1
-    #: inner chunk width of a hybrid member-chunked lowering (0 = unchunked);
-    #: the schedule tuner prices C-member-wide VMEM blocks when set
-    member_chunk: int = 0
-
-    def hw(self) -> Hardware:
-        return resolve_hardware(self.hardware)
-
-
-@dataclasses.dataclass
-class PassStats:
-    name: str
-    rewrites: int
-    seconds: float
-    #: wall time of the post-pass verifier run (0 when verification is off)
-    verify_seconds: float = 0.0
-    #: violations the verifier attributed to this pass (always 0 on a
-    #: successful pipeline — violations raise; kept for bench reporting)
-    verify_violations: int = 0
-
-
-@dataclasses.dataclass
-class PipelineReport:
-    """Observable result of one :func:`optimize_program` run."""
-
-    opt_level: int
-    backend: str
-    hardware: str
-    passes: list[PassStats] = dataclasses.field(default_factory=list)
-    kernels_before: int = 0
-    kernels_after: int = 0
-    hbm_bytes_before: int = 0
-    hbm_bytes_after: int = 0
-    #: effective verification mode ("off" | "passes" | "full") and the wall
-    #: time spent verifying the *input* program (per-pass times live in
-    #: :class:`PassStats`)
-    verify_mode: str = "off"
-    input_verify_seconds: float = 0.0
-
-    @property
-    def total_rewrites(self) -> int:
-        return sum(p.rewrites for p in self.passes)
-
-    @property
-    def total_seconds(self) -> float:
-        return sum(p.seconds for p in self.passes)
-
-    def summary(self) -> str:
-        lines = [f"opt_level={self.opt_level} [{self.backend}/{self.hardware}]"
-                 f": kernels {self.kernels_before} -> {self.kernels_after}, "
-                 f"modeled HBM bytes {self.hbm_bytes_before} -> "
-                 f"{self.hbm_bytes_after}"]
-        for p in self.passes:
-            lines.append(f"  {p.name:20s} rewrites={p.rewrites:4d} "
-                         f"{p.seconds * 1e3:8.2f} ms")
-        if self.verify_mode != "off":
-            lines.append(f"  verifier ({self.verify_mode}): 0 violations, "
-                         f"{self.total_verify_seconds * 1e3:.2f} ms total")
-        return "\n".join(lines)
-
-    @property
-    def total_verify_seconds(self) -> float:
-        return self.input_verify_seconds + \
-            sum(p.verify_seconds for p in self.passes)
-
-    @property
-    def total_verify_violations(self) -> int:
-        return sum(p.verify_violations for p in self.passes)
-
-    def as_dict(self) -> dict:
-        return {
-            "opt_level": self.opt_level,
-            "backend": self.backend,
-            "hardware": self.hardware,
-            "kernels_before": self.kernels_before,
-            "kernels_after": self.kernels_after,
-            "hbm_bytes_before": self.hbm_bytes_before,
-            "hbm_bytes_after": self.hbm_bytes_after,
-            "verify_mode": self.verify_mode,
-            "input_verify_seconds": self.input_verify_seconds,
-            "passes": [dataclasses.asdict(p) for p in self.passes],
-        }
+from .rewrite.base import PassFn  # noqa: F401
 
 
 def register_pass(name: str, fn: PassFn | None = None):
-    """Register a graph pass (usable as a decorator)."""
+    """Deprecated: register a graph pass (usable as a decorator).
+
+    Use :func:`repro.core.rewrite.register_rule` with a
+    :class:`~repro.core.rewrite.RewriteRule` (or
+    :class:`~repro.core.rewrite.FunctionRule`) instead.
+    """
+    warnings.warn(
+        "register_pass() is deprecated; wrap the function in a "
+        "repro.core.rewrite.FunctionRule (or implement RewriteRule) and "
+        "call register_rule()", DeprecationWarning, stacklevel=2)
+
     def deco(f: PassFn) -> PassFn:
-        _PASSES[name] = f
+        register_rule(FunctionRule(name, f), overwrite=True)
         return f
+
     if fn is not None:
         return deco(fn)
     return deco
 
 
 def available_passes() -> list[str]:
-    return sorted(_PASSES)
+    return available_rules()
 
 
 def get_pass(name: str) -> PassFn:
-    try:
-        return _PASSES[name]
-    except KeyError:
-        raise KeyError(f"unknown pass {name!r}; registered: "
-                       f"{', '.join(available_passes())}") from None
-
-
-# ---------------------------------------------------------------------------
-# Built-in passes
-# ---------------------------------------------------------------------------
-
-
-@register_pass("prune_transients")
-def _prune_transients(program: StencilProgram, ctx: PassContext) -> int:
-    return prune_transients(program)
-
-
-@register_pass("strength_reduce")
-def _strength_reduce(program: StencilProgram, ctx: PassContext) -> int:
-    return strength_reduce_program(program)
-
-
-def _fused_schedule(program: StencilProgram, node: Node, hw: Hardware):
-    """The schedule the fused node will actually lower with: its own if one
-    survived fusion, else the hardware heuristic (which acceptance assigns,
-    so the footprint check below and the emitted kernel always agree)."""
-    shape = program.node_dom(node).shape()
-    return node.schedule or heuristic_schedule(node.stencil, shape, hw=hw)
-
-
-def _fused_fits(program: StencilProgram, node: Node, hw: Hardware) -> bool:
-    """A fused kernel is feasible only if (a) its compounded read reach plus
-    its write extent stays inside the allocation halo (inlined producers
-    stack their offsets onto the consumer's), and (b) its working set under
-    the schedule it will lower with fits fast memory."""
-    if (max(node.extend) + node.stencil.max_halo() > program.dom.halo):
-        return False
-    shape = program.node_dom(node).shape()
-    sched = _fused_schedule(program, node, hw)
-    return vmem_footprint(node.stencil, sched, shape) <= hw.vmem_bytes
-
-
-def _greedy_otf(program: StencilProgram, state: State, hw: Hardware) -> int:
-    """Repeatedly inline the most-profitable producer/consumer pair until the
-    model stops predicting wins (paper's OTF hierarchy level).
-
-    Trial fusions are reverted cheaply: ``otf_fuse`` mutates only the
-    consumer node (stencil/label) and the state's node list, so a shallow
-    snapshot suffices — no graph deepcopy per candidate.
-    """
-    n = 0
-    while True:
-        before = state_cost(program, state, hw)
-        best = None  # (benefit, producer, consumer)
-        for prod, cons in otf_candidates(state):
-            snapshot = (list(state.nodes), cons.stencil, cons.label)
-            fused = otf_fuse(program, state, prod, cons)
-            after = state_cost(program, state, hw)
-            if (after < before and _fused_fits(program, fused, hw)
-                    and (best is None or before - after > best[0])):
-                best = (before - after, prod, cons)
-            state.nodes, cons.stencil, cons.label = snapshot
-        if best is None:
-            return n
-        fused = otf_fuse(program, state, best[1], best[2])
-        fused.schedule = _fused_schedule(program, fused, hw)
-        n += 1
-
-
-def _greedy_sgf(program: StencilProgram, state: State, hw: Hardware,
-                max_len: int = 6) -> int:
-    """Greedily merge the most-profitable connected run into one kernel until
-    no candidate improves the model (paper's SGF hierarchy level).
-
-    ``subgraph_fuse`` never mutates member nodes (it builds a fresh fused
-    node), so reverting a trial is just restoring the node list.
-    """
-    n = 0
-    while True:
-        before = state_cost(program, state, hw)
-        best = None  # (benefit, member nodes)
-        for nodes in sgf_candidates(state, max_len=max_len):
-            if not can_subgraph_fuse(nodes, halo=program.dom.halo):
-                continue
-            snapshot = list(state.nodes)
-            fused = subgraph_fuse(program, state, list(nodes))
-            after = state_cost(program, state, hw)
-            if (after < before and _fused_fits(program, fused, hw)
-                    and (best is None or before - after > best[0])):
-                best = (before - after, list(nodes))
-            state.nodes = snapshot
-        if best is None:
-            return n
-        fused = subgraph_fuse(program, state, best[1])
-        fused.schedule = _fused_schedule(program, fused, hw)
-        n += 1
-
-
-@register_pass("greedy_fuse")
-def _greedy_fuse(program: StencilProgram, ctx: PassContext) -> int:
-    """Cost-model-guided fusion: OTF first, then SGF on the OTF-optimized
-    graph (the paper's transformation hierarchy), per state."""
-    hw = ctx.hw()
-    n = 0
-    for state in program.states:
-        n += _greedy_otf(program, state, hw)
-        n += _greedy_sgf(program, state, hw)
-    return n
-
-
-@register_pass("tune_schedules")
-def _tune_schedules(program: StencilProgram, ctx: PassContext) -> int:
-    """Per-motif schedule assignment through the persistent tuning cache:
-    each distinct (stencil, domain) is searched once per machine; identical
-    motif instances (FVT's repeated chains) share the cached result.
-
-    Every node is (re-)tuned — including fused nodes that carry the
-    feasibility heuristic from ``greedy_fuse``.  To pin a schedule against
-    the tuner, pass ``schedule_overrides`` to ``compile_program``; those
-    override node schedules at lowering time.
-    """
-    from .autotune import tune_stencil
-
-    hw = ctx.hw()
-    n = 0
-    for node in program.all_nodes():
-        dom = program.node_dom(node)
-        results = tune_stencil(node.stencil, dom, hw=hw, backend=ctx.backend,
-                               n_members=ctx.n_members,
-                               member_chunk=ctx.member_chunk, cache=ctx.cache)
-        if results and results[0].cost != float("inf"):
-            node.schedule = results[0].schedule
-            n += 1
-    return n
-
-
-# ---------------------------------------------------------------------------
-# Pipeline driver
-# ---------------------------------------------------------------------------
-
-
-def ladder_for(opt_level: int) -> tuple[str, ...]:
-    if opt_level < 0:
-        raise ValueError(f"opt_level must be >= 0, got {opt_level}")
-    return OPT_LADDERS[min(opt_level, MAX_OPT_LEVEL)]
-
-
-def optimize_program(program: StencilProgram, *, opt_level: int = 3,
-                     backend: str = "jnp",
-                     hardware: Hardware | str | None = None,
-                     cache=None,
-                     passes: tuple[str, ...] | None = None,
-                     inplace: bool = False,
-                     n_members: int = 1,
-                     member_chunk: int = 0,
-                     verify: str = "off",
-                     ) -> tuple[StencilProgram, PipelineReport]:
-    """Run the opt ladder for ``opt_level`` (or an explicit ``passes`` list)
-    over a clone of ``program``; returns ``(optimized, report)``.
-
-    The clone preserves the caller's graph: `compile_program` can be invoked
-    repeatedly at different opt levels on the same program object.
-
-    ``verify="passes"``/``"full"`` runs the independent static verifier
-    (:mod:`repro.core.analysis`) on the input program and again after every
-    pass.  Because the input must be clean before any pass runs, a
-    violation found after pass P is attributed to P: the raised
-    :class:`~repro.core.errors.VerificationError` carries ``pass_name`` and
-    the structured diagnostics, and per-pass verifier wall time is recorded
-    in the report's :class:`PassStats`.
-    """
-    do_verify = verify in ("passes", "full")
-    if do_verify:
-        from .analysis import verify_program
-    elif verify != "off":
-        raise ValueError(f"verify={verify!r} invalid; expected "
-                         "'off', 'passes' or 'full'")
-    hw = resolve_hardware(hardware)
-    names = ladder_for(opt_level) if passes is None else tuple(passes)
-    prog = program if inplace else program.copy()
-    report = PipelineReport(
-        opt_level=opt_level, backend=backend, hardware=hw.name,
-        kernels_before=len(prog.all_nodes()),
-        hbm_bytes_before=program_bytes(prog), verify_mode=verify)
-    ctx = PassContext(backend=backend, hardware=hw, cache=cache,
-                      n_members=max(1, n_members),
-                      member_chunk=max(0, member_chunk))
-    if do_verify:
-        # input program first: every pass then starts from a verified
-        # graph, which is what makes per-pass attribution sound
-        t0 = time.perf_counter()
-        verify_program(prog, raise_on_violation=True)
-        report.input_verify_seconds = time.perf_counter() - t0
-    for name in names:
-        fn = get_pass(name)
-        t0 = time.perf_counter()
-        rewrites = fn(prog, ctx)
-        stats = PassStats(name, rewrites, time.perf_counter() - t0)
-        if do_verify:
-            t1 = time.perf_counter()
-            stats.verify_violations = len(
-                verify_program(prog, pass_name=name,
-                               raise_on_violation=True))
-            stats.verify_seconds = time.perf_counter() - t1
-        report.passes.append(stats)
-    report.kernels_after = len(prog.all_nodes())
-    report.hbm_bytes_after = program_bytes(prog)
-    return prog, report
+    """Deprecated accessor: returns ``fn(program, ctx) -> n_rewrites``
+    driving the named rule (its aggregate ``run`` for legacy passes, a
+    solo fixpoint for pattern rules)."""
+    rule = get_rule(name)
+    return rule.run

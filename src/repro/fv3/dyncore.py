@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable
 
 import jax
@@ -377,7 +378,7 @@ def _csw_inputs(src, metrics):
 
 
 def _acoustic_iteration(cfg, runners, params, halo_fn, state, metrics,
-                        overlap=None):
+                        overlap=None, skip_delpc_exchange=False):
     """One acoustic substep on local (or per-tile) padded arrays.
 
     Structure matches the paper's blue region (Fig. 2): c_sw-lite +
@@ -411,8 +412,15 @@ def _acoustic_iteration(cfg, runners, params, halo_fn, state, metrics,
     st = halo_fn(st, list(STATE_FIELDS))
     out = run_csw(_csw_inputs(st, metrics), params)
     st["w"] = out["w"]
-    # d_sw's Smagorinsky reads delpc at extent (1,1) — one scalar exchange
-    delpc = halo_fn({**st, "delpc": out["delpc"]}, ["delpc"])["delpc"]
+    if skip_delpc_exchange:
+        # recompute-vs-exchange applied: c_sw computed delpc on a one-cell
+        # wider rim from the exchanged inputs, so d_sw's (1,1) read is
+        # already satisfied — no per-substep scalar exchange
+        delpc = out["delpc"]
+    else:
+        # d_sw's Smagorinsky reads delpc at extent (1,1) — one scalar
+        # exchange
+        delpc = halo_fn({**st, "delpc": out["delpc"]}, ["delpc"])["delpc"]
     dsw_in = {"u": st["u"], "v": st["v"], "delp": st["delp"],
               "pt": st["pt"], "delpc": delpc}
     out2 = run_dsw(dsw_in, params)
@@ -471,14 +479,16 @@ def _scan_substeps(body, st, n, unroll):
 
 
 def _remap_iteration(cfg, runners, params, halo_fn, state, metrics,
-                     overlap=None, unroll=False, counters=None):
+                     overlap=None, unroll=False, counters=None,
+                     skip_delpc_exchange=False):
     run_trc, run_remap = runners[2], runners[3]
 
     def acoustic_body(st):
         if counters is not None:
             counters["acoustic_traces"] += 1
         return _acoustic_iteration(cfg, runners, params, halo_fn, st,
-                                   metrics, overlap=overlap)
+                                   metrics, overlap=overlap,
+                                   skip_delpc_exchange=skip_delpc_exchange)
 
     st = _scan_substeps(acoustic_body, dict(state), cfg.n_split, unroll)
     if overlap is not None and overlap[2] is not None:
@@ -635,12 +645,12 @@ def make_step_ensemble(cfg: FV3Config, n_members: int, *,
     prog_members, prog_batch = n_members, spec
     if spec.chunk > 0:  # explicit chunk width (AUTO resolves per program)
         C = spec.chunk_for(n_members)
-        grid_outer = (spec.outer == "grid"
-                      and str(backend).startswith("pallas"))
-        if C < n_members and not grid_outer:
+        grid_loop = (spec.loop == "grid"
+                     and str(backend).startswith("pallas"))
+        if C < n_members and not grid_loop:
             # step-level chunk loop: compile everything C-wide, scan chunks
             member_chunks = (n_members, C)
-            prog_members, prog_batch = C, BatchSpec(inner=spec.inner)
+            prog_members, prog_batch = C, BatchSpec(mode=spec.mode)
     dom = cfg.seq_dom()
     progs, runners = _make_programs(cfg, dom, backend,
                                     _resolve_opt_level(optimize, opt_level),
@@ -685,7 +695,17 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     orthogonally to the ``tile/y/x`` domain decomposition — each member
     group runs an independent dycore; no collective ever crosses the member
     axis (the halo ppermutes name only ``tile/y/x``).  The legacy
-    ``ensemble=True`` flag is shorthand for ``member_axis="ens"``.
+    ``ensemble=True`` flag (deprecated shorthand for ``member_axis="ens"``;
+    emits a :class:`DeprecationWarning`) will be removed next release.
+
+    At ``opt_level >= 4`` the non-overlap path additionally applies the
+    recompute-vs-exchange rewrite
+    (:class:`repro.core.rewrite.RecomputeVsExchange`): when the cost model
+    prefers it, ``c_sw`` computes ``delpc`` on a one-cell-wider rim from
+    the already-exchanged inputs and the per-substep ``delpc`` halo
+    exchange is dropped — bit-identical (the rim equals the neighbor's
+    interior values), ``n_split * k_split`` fewer exchange rounds per step
+    (``step.delpc_exchange_skipped`` reports whether it applied).
 
     Without ``n_members`` the mesh's member extent must equal the ensemble
     size (one member per member-group).  ``n_members=M`` composes the
@@ -711,8 +731,13 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     """
     from jax.sharding import PartitionSpec as P
 
-    if ensemble and member_axis is None:
-        member_axis = "ens"
+    if ensemble:
+        warnings.warn(
+            "make_step_distributed(ensemble=True) is deprecated; pass "
+            "member_axis='ens' (or your mesh's member axis name) instead",
+            DeprecationWarning, stacklevel=2)
+        if member_axis is None:
+            member_axis = "ens"
     ml = 1
     if n_members is not None:
         if member_axis is None:
@@ -749,6 +774,27 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
             for p in progs[:3])
         if all(c is not None for c in cands):
             ov = cands
+    skip_delpc = False
+    if ov is None and lvl >= 4:
+        # recompute-vs-exchange: widen c_sw so delpc is valid on a one-cell
+        # rim (d_sw's widest read) — drops the per-substep delpc exchange
+        # when the cost model prefers redundant rim compute over the
+        # ppermute rounds.  The rim equals the neighbor's interior bit for
+        # bit: c_sw runs on the already-exchanged inputs (halo-h ghosts)
+        # and its reads from the widened window stay within h.
+        from repro.core.backend import get_backend
+        from repro.core.rewrite import (
+            ExchangeModel, PassContext, widen_for_exchange,
+        )
+        itemsize = np.dtype(cfg.dtype).itemsize
+        model = ExchangeModel(
+            n_rounds=len(exchanger.rounds),
+            ring_bytes=4 * nl * h * nk * itemsize)
+        ctx = PassContext(
+            backend=backend,
+            hardware=get_backend(backend).resolve_hw(hardware))
+        skip_delpc = widen_for_exchange(
+            progs[0], {"delpc": (1, 1)}, model, ctx) > 0
     if ov is not None:
         # the overlapped runners embed the opt-ladder-compiled full-domain
         # program — reuse it rather than running the optimizer again for
@@ -778,7 +824,8 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
 
         def remap_body(s):
             return _remap_iteration(cfg, runners, params, halo_fn, s,
-                                    metrics, overlap=ov, unroll=unroll)
+                                    metrics, overlap=ov, unroll=unroll,
+                                    skip_delpc_exchange=skip_delpc)
 
         st = _scan_substeps(remap_body, st, cfg.k_split, unroll)
         return {k: v.reshape((ml,) + (1,) * (lead - 1)
@@ -805,4 +852,5 @@ def make_step_distributed(cfg: FV3Config, mesh, *, backend: str = "jnp",
     step.batch = batch if ml > 1 else None
     step.member_chunk = runners[0].member_chunk if ml > 1 else None
     step.overlapped = ov is not None
+    step.delpc_exchange_skipped = skip_delpc
     return step

@@ -137,8 +137,10 @@ def make_overlapped_runner(program: StencilProgram, *,
     # strips compile at most at level 1: fusion trials and per-strip-domain
     # schedule tuning buy nothing on an h-wide recompute band, and level 1
     # (prune + strength-reduce) is exactly the bit-affecting prefix of the
-    # ladder — so strip and full-domain outputs stay bit-aligned across the
-    # stitch seam at every opt_level (fusion and schedules preserve values)
+    # ladder — levels 2–4 (fusion, schedules, and the pattern rewrites:
+    # stencil-combine, cross-computation CSE) all preserve values bit for
+    # bit, so strip and full-domain outputs stay bit-aligned across the
+    # stitch seam at every opt_level
     strip_level = min(opt_level, 1)
     strips = []
     for tag, sdom, (oi, oj), slab, src, dst in specs:

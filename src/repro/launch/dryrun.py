@@ -292,7 +292,8 @@ def run_fv3(*, multi_pod: bool, save: bool = True) -> dict:
     try:
         mesh = make_fv3_mesh(layout=cfg.layout,
                              ensemble=2 if multi_pod else 1)
-        step = make_step_distributed(cfg, mesh, ensemble=multi_pod)
+        step = make_step_distributed(
+            cfg, mesh, member_axis="ens" if multi_pod else None)
         py, px = cfg.layout
         nlp = cfg.n_local + 2 * cfg.halo
         shp = (6, py, px, cfg.nk, nlp, nlp)

@@ -91,6 +91,33 @@ print("DIST_OK")
 
 
 @pytest.mark.slow
+def test_dycore_distributed_opt4_drops_delpc_exchange_bitwise():
+    """opt_level=4's recompute-vs-exchange rewrite widens c_sw so delpc is
+    valid on a one-cell rim and drops the per-substep delpc exchange —
+    bit-identical to the opt_level=3 step, with the step reporting the
+    rewrite applied."""
+    out = run_sub("""
+import numpy as np
+from repro.jaxcompat import make_mesh
+from repro.fv3.dyncore import FV3Config, make_step_distributed
+from repro.fv3.state import init_state, blocks_from_global
+cfg = FV3Config(npx=12, nk=2, halo=6, layout=(2, 2), n_split=2, k_split=1,
+                n_tracers=1)
+mesh = make_mesh((6, 2, 2), ("tile", "y", "x"))
+blocks = blocks_from_global(init_state(cfg), cfg)
+step3 = make_step_distributed(cfg, mesh, overlap=False, opt_level=3)
+step4 = make_step_distributed(cfg, mesh, overlap=False, opt_level=4)
+assert step3.delpc_exchange_skipped is False
+assert step4.delpc_exchange_skipped is True
+b3, b4 = step3(blocks), step4(blocks)
+for k in b3:
+    assert np.array_equal(np.asarray(b3[k]), np.asarray(b4[k])), k
+print("OPT4_DIST_OK")
+""")
+    assert "OPT4_DIST_OK" in out
+
+
+@pytest.mark.slow
 def test_halo_exchanger_carries_leading_member_dim():
     """The ppermute rounds are leading-dim agnostic: a batched exchange of
     (M, nk, nl+2h, nl+2h) local blocks is bit-identical to M per-member

@@ -179,6 +179,38 @@ def test_chunk_spec_tokens_round_trip():
         assert parse_batch(spec.token) == spec
 
 
+def test_batchspec_typed_fields_and_parse():
+    import dataclasses
+    from repro.core.backend.batching import BatchSpec
+
+    sp = BatchSpec(mode="vmap", chunk=4, loop="grid")
+    assert (sp.mode, sp.chunk, sp.loop) == ("vmap", 4, "grid")
+    assert BatchSpec.parse("vmap:4,grid") == sp
+    assert BatchSpec.parse(sp) is sp
+    assert dataclasses.replace(sp, chunk=8) == BatchSpec("vmap", 8, "grid")
+    assert BatchSpec() == BatchSpec(mode="vmap", chunk=0, loop="scan")
+    with pytest.raises(ValueError, match="batch"):
+        BatchSpec(mode="pmap")
+    with pytest.raises(ValueError, match="batch"):
+        BatchSpec(mode="grid", chunk=2, loop="grid")
+
+
+def test_batchspec_legacy_inner_outer_kwargs_deprecated():
+    from repro.core.backend.batching import BatchSpec
+
+    with pytest.warns(DeprecationWarning, match="inner"):
+        legacy = BatchSpec(inner="vmap", chunk=4)
+    with pytest.warns(DeprecationWarning, match="outer"):
+        legacy2 = BatchSpec(mode="vmap", chunk=4, outer="grid")
+    assert legacy == BatchSpec(mode="vmap", chunk=4)
+    assert legacy2 == BatchSpec(mode="vmap", chunk=4, loop="grid")
+    # reading the pre-redesign field names stays silent (properties)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert legacy2.inner == "vmap" and legacy2.outer == "grid"
+
+
 # ---------------------------------------------------------------------------
 # Hybrid member chunking: chunked lowering == per-member loop, bit for bit
 # ---------------------------------------------------------------------------
